@@ -1,0 +1,56 @@
+"""Paper Fig. 5: transfer primitives — strong copy, weak copy,
+broadcast, reduce.
+
+Measured: wall time of the verb on this host (1 device).  Derived:
+modeled v5e times (host->HBM over PCIe for scatter; ICI ring for
+reduce) at 1/2/4/8 devices, showing the paper's effects: strong copy
+gets FASTER with more devices (parallel PCIe paths), reduce efficiency
+decays with P2P hops.
+"""
+
+import numpy as np
+
+from repro.core import DeviceGroup, broadcast, gather, reduce, segment
+from repro.core.runtime import HW
+
+from .common import allreduce_time, copy_time, fmt_row, time_fn
+
+PCIE_BW = 16e9          # host->device, per path (the paper's 8-GPU box
+                        # has multiple independent PCIe pathways)
+
+
+def rows(quick=False):
+    g = DeviceGroup.all_devices((1,), ("data",))
+    out = []
+    n = 256 if quick else 512
+    batch = 8
+    x = (np.random.randn(batch, n, n) + 1j *
+         np.random.randn(batch, n, n)).astype(np.complex64)
+    nbytes = x.nbytes
+
+    us = time_fn(lambda: segment(x, g).data)
+    der = ";".join(
+        f"t{G}={copy_time(nbytes / G, PCIE_BW) * 1e6:.0f}us"
+        for G in (1, 2, 4, 8))
+    out.append(fmt_row(f"fig5_strong_copy_{batch}x{n}", us, der))
+
+    us = time_fn(lambda: segment(x[:1], g).data)   # per-device constant
+    der = ";".join(
+        f"t{G}={copy_time(nbytes / batch, PCIE_BW) * 1e6:.0f}us"
+        for G in (1, 2, 4, 8))
+    out.append(fmt_row(f"fig5_weak_copy_1x{n}", us, der))
+
+    us = time_fn(lambda: broadcast(x[0], g).data)
+    one = x[0].nbytes
+    der = ";".join(
+        f"t{G}={(copy_time(one, PCIE_BW) + (G - 1) * one / HW['ici_bw']) * 1e6:.0f}us"
+        for G in (1, 2, 4, 8))
+    out.append(fmt_row(f"fig5_broadcast_{n}", us, der))
+
+    sm = segment(x, g)
+    us = time_fn(lambda: reduce(sm))
+    der = ";".join(
+        f"t{G}={(allreduce_time(one, G) / 2 + copy_time(one, PCIE_BW)) * 1e6:.0f}us"
+        for G in (1, 2, 4, 8))
+    out.append(fmt_row(f"fig5_reduce_{n}", us, der))
+    return out

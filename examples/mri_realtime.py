@@ -1,0 +1,86 @@
+"""End-to-end driver (the paper's §3 application): real-time MRI movie
+reconstruction with NLINV — acquisition simulation, sequential frames
+with temporal regularization, gridding-baseline comparison, per-frame
+latency report.
+
+    PYTHONPATH=src python examples/mri_realtime.py --frames 5 --n 48
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/mri_realtime.py --devices 4
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeviceGroup
+from repro.nlinv import phantom
+from repro.nlinv.gridding import gridding_recon
+from repro.nlinv.operators import sobolev_weight, uinit
+from repro.nlinv.recon import (make_dist_reconstruct, pad_channels,
+                               reconstruct_movie)
+
+
+def nrmse(img, truth, fov):
+    m = np.asarray(fov) > 0
+    a = np.abs(np.asarray(img))[m]
+    b = np.abs(np.asarray(truth))[m]
+    a /= max(a.max(), 1e-9)
+    b /= max(b.max(), 1e-9)
+    return float(np.sqrt(np.mean((a - b) ** 2)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=5)
+    ap.add_argument("--n", type=int, default=48, help="matrix size")
+    ap.add_argument("--coils", type=int, default=8)
+    ap.add_argument("--spokes", type=int, default=11)
+    ap.add_argument("--newton", type=int, default=7)
+    ap.add_argument("--devices", type=int, default=0,
+                    help=">1: channel-split distributed reconstruction")
+    args = ap.parse_args()
+
+    print(f"acquiring {args.frames} frames (n={args.n}, J={args.coils}, "
+          f"{args.spokes} spokes, golden-angle)")
+    data = phantom.make_dataset(n=args.n, ncoils=args.coils,
+                                nspokes=args.spokes, frames=args.frames)
+
+    frame_fn = None
+    if args.devices > 1:
+        g = DeviceGroup.subset(args.devices)
+        frame_fn = make_dist_reconstruct(g, "data", newton=args.newton,
+                                         cg_iters=20, channel_sum="crop")
+        data = dict(data)
+        data["y"] = pad_channels(data["y"].reshape(-1, *data["y"].shape[1:]),
+                                 args.devices).reshape(
+            args.frames, -1, data["grid"], data["grid"]) \
+            if data["y"].shape[1] % args.devices else data["y"]
+        print(f"distributed: {args.devices} devices, coils split, "
+              f"cropped all-reduce (paper kern_all_red_p2p_2d)")
+
+    t0 = time.perf_counter()
+    movie = reconstruct_movie(data, newton=args.newton, cg_iters=20,
+                              frame_fn=frame_fn)
+    jax.block_until_ready(movie)
+    dt = time.perf_counter() - t0
+    fps = args.frames / dt
+    print(f"reconstructed {args.frames} frames in {dt:.2f}s "
+          f"({fps:.2f} fps incl. compile)")
+
+    errs, gerrs = [], []
+    for f in range(args.frames):
+        errs.append(nrmse(movie[f], data["rho"][f], data["fov"]))
+        gr = gridding_recon(jnp.asarray(data["y"][f]),
+                            jnp.asarray(data["masks"][f]),
+                            jnp.asarray(data["fov"]))
+        gerrs.append(nrmse(gr, data["rho"][f], data["fov"]))
+    print(f"NRMSE nlinv  : {np.mean(errs):.4f}  (per-frame {np.round(errs,3)})")
+    print(f"NRMSE gridding: {np.mean(gerrs):.4f}")
+    print("nlinv beats gridding:", np.mean(errs) < np.mean(gerrs))
+
+
+if __name__ == "__main__":
+    main()

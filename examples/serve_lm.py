@@ -1,0 +1,10 @@
+"""Serve a small LM with batched requests through the slot engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--requests", "6",
+                "--max-new", "12", "--batch", "3"])

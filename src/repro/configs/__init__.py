@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` ids -> (full, smoke) configs,
+the assigned input-shape set, and per-cell applicability rules."""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+ARCH_IDS = [
+    "xlstm-350m", "minicpm3-4b", "qwen3-0.6b", "gemma2-27b", "llama3.2-3b",
+    "recurrentgemma-2b", "llama-3.2-vision-11b", "granite-moe-3b-a800m",
+    "deepseek-v2-lite-16b", "whisper-tiny",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+# shape id -> (seq_len, global_batch, step kind)
+SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(arch: str):
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.SMOKE
+
+
+def cell_applicable(cfg, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) cell."""
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic"
+    return True, ""
+
+
+def input_specs(cfg, shape: str, *, mesh=None):
+    """ShapeDtypeStruct stand-ins for every input of the step function
+    (the dry-run contract: weak-type-correct, shardable, no allocation)."""
+    from ..models import frontends, transformer
+
+    seq, gbatch, kind = SHAPES[shape]
+    specs = {}
+    if kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)
+    elif kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((gbatch, 1), jnp.int32)
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, gbatch, seq, cfg.cdtype))
+        specs["cache"] = cache
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    fr = frontends.frontend_struct(cfg, gbatch, cfg.cdtype)
+    if fr is not None and kind != "decode":
+        specs["enc"] = fr
+    return specs

@@ -1,0 +1,19 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA (hf:Qwen/Qwen3-8B family).
+
+28L d_model=1024 16H (kv=8) d_ff=3072 vocab=151936, head_dim=128.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_ff=3072,
+    vocab=151936,
+    pattern=("attn",), head_dim=128, qk_norm=True, rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-0.6b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    pattern=("attn",), head_dim=32, qk_norm=True, rope_theta=1e6,
+)

@@ -1,0 +1,175 @@
+"""MPI-like communication verbs over segmented containers (paper §2.3).
+
+The paper implements a subset of the MPI standard routines for segmented
+containers: copy, scatter, gather, broadcast, reduce (Fig. 3), with the
+transfer path chosen by topology (P2P inside a PCIe domain, host-staged
+across IOHs).  Here every verb lowers to ``shard_map`` + ``jax.lax``
+collectives, and the topology split becomes the ICI/DCN axis split:
+``hierarchical=True`` decomposes an all-reduce into
+reduce-scatter(ICI) -> all-reduce(DCN) -> all-gather(ICI), which moves
+``1/n_ici`` of the bytes over the slow inter-pod links — the TPU analogue
+of the paper's staged cross-IOH reduction.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .runtime import DeviceGroup, current_group
+from .segmented import Policy, SegmentedArray, gather, segment
+
+# re-export container-level scatter/gather as comm verbs (Fig. 3 naming)
+scatter = segment
+gather = gather
+
+_REDUCERS = {
+    "sum": (lax.psum, jnp.sum),
+    "max": (lax.pmax, jnp.max),
+    "min": (lax.pmin, jnp.min),
+}
+
+
+def broadcast(x, group: DeviceGroup | None = None) -> SegmentedArray:
+    """Broadcast a local array to every device (-> CLONE container)."""
+    return segment(x, group, policy=Policy.CLONE)
+
+
+def _axis_arg(mesh_axes: Sequence[str]):
+    return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+
+
+def reduce(seg: SegmentedArray, op: str = "sum") -> jax.Array:
+    """Merge the segments elementwise into one local array (paper Fig. 3/5:
+    'reduce merges one matrix per GPU' — the segmented dim is reduced).
+    """
+    pcoll, jred = _REDUCERS[op]
+
+    def body(x):
+        x = jred(x, axis=seg.dim)
+        return pcoll(x, _axis_arg(seg.mesh_axes))
+
+    out_spec = P(*[None] * (seg.data.ndim - 1))
+    return jax.shard_map(body, mesh=seg.group.mesh,
+                         in_specs=seg.pspec, out_specs=out_spec)(seg.data)
+
+
+def all_reduce(seg: SegmentedArray, op: str = "sum",
+               hierarchical: bool = False) -> SegmentedArray:
+    """Like ``reduce`` but the result is CLONEd on every device
+    (the paper's Σ ρ_g block-wise all-reduce)."""
+    pcoll, jred = _REDUCERS[op]
+    group = seg.group
+
+    def body(x):
+        x = jred(x, axis=seg.dim)
+        if hierarchical and op == "sum":
+            return hierarchical_psum(x, group, seg.mesh_axes)
+        return pcoll(x, _axis_arg(seg.mesh_axes))
+
+    out_spec = P(*[None] * (seg.data.ndim - 1))
+    # check_vma=False: after the in-pod all-gather the value IS replicated,
+    # but JAX's varying-axes inference cannot prove it.
+    out = jax.shard_map(body, mesh=group.mesh, in_specs=seg.pspec,
+                        out_specs=out_spec, check_vma=False)(seg.data)
+    return SegmentedArray(out, group, Policy.CLONE, 0, seg.mesh_axes)
+
+
+def hierarchical_psum(x: jax.Array, group: DeviceGroup,
+                      mesh_axes: Sequence[str]) -> jax.Array:
+    """psum decomposed by topology; call INSIDE a shard_map body.
+
+    reduce-scatter over ICI axes, all-reduce over DCN axes, all-gather
+    back over ICI — so each slow (DCN) link carries only 1/n_ici of the
+    payload.  Falls back to a flat psum when the leading dim does not
+    tile.
+    """
+    ici = [a for a in mesh_axes if a in group.ici_axes]
+    dcn = [a for a in mesh_axes if a in group.dcn_axes]
+    n_ici = math.prod(group.mesh.shape[a] for a in ici) if ici else 1
+    if not dcn or not ici or x.shape[0] % n_ici != 0:
+        return lax.psum(x, _axis_arg(tuple(mesh_axes)))
+    for a in ici:
+        x = lax.psum_scatter(x, a, scatter_dimension=0, tiled=True)
+    for a in dcn:
+        x = lax.psum(x, a)
+    for a in reversed(ici):
+        x = lax.all_gather(x, a, axis=0, tiled=True)
+    return x
+
+
+def copy(src: SegmentedArray, *, policy: Policy | None = None,
+         dim: int | None = None,
+         mesh_axes: tuple[str, ...] | None = None,
+         block: int | None = None) -> SegmentedArray:
+    """Segmented-to-segmented copy (paper Fig. 3), i.e. re-segmentation.
+
+    Same policy/dim -> pure device-to-device copy; otherwise XLA inserts
+    the minimal collective (all-gather / all-to-all / permute) — the
+    library's job in the paper of picking the best transfer path.
+    """
+    policy = src.policy if policy is None else policy
+    dim = src.dim if dim is None else dim
+    mesh_axes = src.mesh_axes if mesh_axes is None else mesh_axes
+    if Policy.BLOCK in (policy, src.policy):
+        # block-cyclic layouts permute element order: go through gather
+        return segment(gather(src), src.group, policy=policy, dim=dim,
+                       mesh_axes=mesh_axes, block=block or src.block)
+    dst = SegmentedArray(src.data, src.group, policy, dim, mesh_axes,
+                         orig_len=src.orig_len, halo=src.halo)
+    return dst.with_data(jax.device_put(src.data, dst.sharding))
+
+
+def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
+    """Re-segment from ``seg.dim`` to ``new_dim`` with an all-to-all
+    (MPI_Alltoall — the natural extension of the paper's verb set; used
+    for MoE dispatch and FFT transposes)."""
+    ax = _axis_arg(seg.mesh_axes)
+
+    def body(x):
+        n = seg.nseg
+        return lax.all_to_all(x, ax, split_axis=new_dim, concat_axis=seg.dim,
+                              tiled=True)
+
+    in_spec = seg.pspec
+    out = list([None] * seg.data.ndim)
+    out[new_dim] = ax
+    out_spec = P(*out)
+    data = jax.shard_map(body, mesh=seg.group.mesh,
+                         in_specs=in_spec, out_specs=out_spec)(seg.data)
+    import dataclasses
+    return dataclasses.replace(seg, data=data, dim=new_dim,
+                               orig_len=data.shape[new_dim])
+
+
+def reduce_scatter(seg: SegmentedArray, op: str = "sum") -> SegmentedArray:
+    """Reduce the segments and leave the result segmented along dim 0 of
+    the merged array (MPI_Reduce_scatter)."""
+    if op != "sum":
+        raise NotImplementedError("reduce_scatter supports sum")
+    ax = _axis_arg(seg.mesh_axes)
+    nseg = seg.nseg
+    merged_len = [d for i, d in enumerate(seg.data.shape) if i != seg.dim][0]
+    padded = math.ceil(merged_len / nseg) * nseg
+
+    def body(x):
+        x = jnp.sum(x, axis=seg.dim)
+        if padded != merged_len:
+            pad = [(0, 0)] * x.ndim
+            pad[0] = (0, padded - merged_len)
+            x = jnp.pad(x, pad)
+        return lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+
+    merged_ndim = seg.data.ndim - 1
+    out = [None] * merged_ndim
+    out[0] = ax
+    data = jax.shard_map(body, mesh=seg.group.mesh,
+                         in_specs=seg.pspec, out_specs=P(*out))(seg.data)
+    return SegmentedArray(data, seg.group, Policy.NATURAL, 0, seg.mesh_axes,
+                          orig_len=merged_len)

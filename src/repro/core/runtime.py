@@ -1,0 +1,115 @@
+"""Runtime environment — the MGPU ``environment`` / ``dev_group`` analogue.
+
+MGPU instantiates an ``environment`` that detects the devices in the node
+and lets the user restrict computation to a ``dev_group``.  On TPU the
+equivalent object is a named-axis mesh: the environment builds a
+``jax.Mesh`` from the available devices, classifies each axis as ICI
+(intra-pod, fast) or DCN (inter-pod, slow) — the direct analogue of the
+paper's PCIe-domain / IOH-boundary distinction — and supports submesh
+selection (the ``dev_group`` constructor argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Axis names that cross the data-center network rather than ICI.  The
+# paper's topology split (P2P inside an IOH vs. host-staged across IOHs)
+# maps onto this boundary.
+DCN_AXES = ("pod",)
+
+# TPU v5e hardware model used for all analytic/roofline derivations.
+HW = dict(
+    peak_flops_bf16=197e12,  # FLOP/s per chip
+    hbm_bw=819e9,            # bytes/s per chip
+    ici_bw=50e9,             # bytes/s per link (intra-pod)
+    dcn_bw=25e9,             # bytes/s per chip (inter-pod, conservative)
+    vmem_bytes=128 * 2**20,  # VMEM per chip
+    hbm_bytes=16 * 2**30,    # HBM per chip
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGroup:
+    """A named-axis device group (MGPU ``dev_group``)."""
+
+    mesh: Mesh
+
+    # -- constructors -----------------------------------------------------
+    @classmethod
+    def all_devices(cls, shape: Sequence[int] | None = None,
+                    axes: Sequence[str] = ("data",)) -> "DeviceGroup":
+        """Build a group over every addressable device (MGPU default ctor)."""
+        ndev = len(jax.devices())
+        if shape is None:
+            shape = (ndev,)
+        if math.prod(shape) != ndev:
+            raise ValueError(f"mesh shape {shape} != device count {ndev}")
+        mesh = jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        return cls(mesh)
+
+    @classmethod
+    def subset(cls, n: int, axes: Sequence[str] = ("data",)) -> "DeviceGroup":
+        """Restrict to the first ``n`` devices (MGPU ``dev_group`` ctor)."""
+        devs = np.asarray(jax.devices()[:n]).reshape((n,))
+        return cls(Mesh(devs, tuple(axes)))
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "DeviceGroup":
+        return cls(mesh)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def ndev(self) -> int:
+        return self.mesh.size
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def shape(self) -> Mapping[str, int]:
+        return dict(self.mesh.shape)
+
+    @property
+    def ici_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a not in DCN_AXES)
+
+    @property
+    def dcn_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in DCN_AXES)
+
+    def axis_size(self, *axes: str) -> int:
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def __enter__(self):
+        self._ctx = self.mesh
+        self._ctx.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        return self._ctx.__exit__(*exc)
+
+
+def current_group(group: DeviceGroup | None = None) -> DeviceGroup:
+    """Default-group resolution: explicit arg > ambient mesh > all devices."""
+    if group is not None:
+        return group
+    env = jax.sharding.get_abstract_mesh()
+    if env is not None and not env.empty:  # inside a `with mesh:` scope
+        try:
+            return DeviceGroup(jax.sharding.get_concrete_mesh())
+        except Exception:
+            pass
+    return DeviceGroup.all_devices()

@@ -1,0 +1,5 @@
+from .failures import (PreemptionGuard, RestartPolicy, StragglerWatchdog,
+                       resume_or_init, run_with_restarts)
+
+__all__ = ["PreemptionGuard", "RestartPolicy", "StragglerWatchdog",
+           "resume_or_init", "run_with_restarts"]

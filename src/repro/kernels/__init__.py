@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage is a kernel triplet: kernel.py (pl.pallas_call +
+BlockSpec VMEM tiling), ops.py (jit'd wrapper with backend dispatch),
+ref.py (pure-jnp oracle used by the allclose sweeps in tests/).
+
+  flash_attention   tiled online-softmax attention (causal/window/softcap/GQA)
+  mlstm             chunkwise matrix-memory mLSTM (xLSTM)
+  rg_lru            blocked linear recurrence (RecurrentGemma)
+  coil_mult         NLINV coil pointwise C / fused channel-summed C^H
+  masked_allreduce  fused masked partial-image sum (kern_all_red_p2p_2d)
+"""

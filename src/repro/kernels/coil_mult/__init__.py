@@ -1,0 +1,6 @@
+from .ops import coil_forward, coil_adjoint
+from .kernel import coil_forward_pallas, coil_adjoint_pallas
+from .ref import coil_forward_ref, coil_adjoint_ref
+
+__all__ = ["coil_forward", "coil_adjoint", "coil_forward_pallas",
+           "coil_adjoint_pallas", "coil_forward_ref", "coil_adjoint_ref"]

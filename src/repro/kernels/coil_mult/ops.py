@@ -1,0 +1,42 @@
+"""jit'd complex-array wrappers with backend dispatch for the coil ops."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import coil_adjoint_pallas, coil_forward_pallas
+from .ref import coil_adjoint_ref, coil_forward_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def _split(x):
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def coil_forward(coils, x, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return coil_forward_ref(coils, x)
+    cr, ci = _split(coils)
+    xr, xi = _split(x)
+    zr, zi = coil_forward_pallas(cr, ci, xr, xi, interpret=not _on_tpu())
+    return (zr + 1j * zi).astype(coils.dtype)
+
+
+def coil_adjoint(coils, z, mask=None, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return coil_adjoint_ref(coils, z, mask)
+    cr, ci = _split(coils)
+    zr, zi = _split(z)
+    m = jnp.ones(coils.shape[1:], jnp.float32) if mask is None \
+        else jnp.asarray(mask, jnp.float32)
+    outr, outi = coil_adjoint_pallas(cr, ci, zr, zi, m,
+                                     interpret=not _on_tpu())
+    return (outr + 1j * outi).astype(coils.dtype)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the coil-sensitivity pointwise operators
+(the paper's custom CUDA kernels: C and the channel-summed C^H)."""
+
+import jax.numpy as jnp
+
+
+def coil_forward_ref(coils, x):
+    """z_j = c_j * x.  coils: (J, X, Y) complex, x: (X, Y) complex."""
+    return coils * x[None]
+
+
+def coil_adjoint_ref(coils, z, mask=None):
+    """Sum_j conj(c_j) * z_j, optionally masked (M_Omega fused)."""
+    out = jnp.sum(jnp.conj(coils) * z, axis=0)
+    if mask is not None:
+        out = out * mask
+    return out

@@ -1,0 +1,6 @@
+from .ops import flash_attention, chunked_attention, decode_attention
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "chunked_attention", "decode_attention",
+           "flash_attention_pallas", "attention_ref"]

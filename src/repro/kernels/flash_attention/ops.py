@@ -1,0 +1,157 @@
+"""jit'd public wrapper for flash attention with backend dispatch.
+
+  impl="pallas"   the TPU Pallas kernel (interpret=True on CPU),
+  impl="chunked"  pure-JAX online-softmax over KV blocks (lax.scan) —
+                  identical memory behaviour to the kernel (no S^2
+                  materialization); the CPU/dry-run path,
+  impl="naive"    the O(S^2) oracle (small shapes only),
+  impl="auto"     pallas on TPU, chunked elsewhere.
+
+The model layer always calls ``flash_attention``/``decode_attention``;
+which backend runs is a deployment decision, not a model change.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _unroll_default() -> bool:
+    # Dry-run costing sets this: XLA's HloCostAnalysis counts a while
+    # body once, so the KV-chunk scan must be unrolled for the compiled
+    # FLOP/byte numbers to reflect the real work (roofline honesty).
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    kv_len=None, q_offset=0, scale=None, impl="auto",
+                    block_q=128, block_k=128):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, kv_len, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale, bq=block_q, bk=block_k,
+            interpret=not _on_tpu())
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, kv_len=kv_len,
+                                 q_offset=q_offset, scale=scale,
+                                 block_k=block_k)
+    if impl == "naive":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, kv_len=kv_len,
+                             q_offset=q_offset, scale=scale)
+    raise ValueError(impl)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      kv_len=None, q_offset=0, scale=None, block_k=None):
+    """Online-softmax attention scanning KV in blocks (pure JAX)."""
+    if block_k is None:
+        block_k = int(os.environ.get("REPRO_BLOCK_K", "512"))
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    bk = min(block_k, T)
+    # pad T to a block multiple; padded keys are masked via kv_len
+    Tp = -(-T // bk) * bk
+    eff_len = jnp.asarray(T if kv_len is None else kv_len, jnp.int32)
+    if Tp != T:
+        pad = [(0, 0), (0, 0), (0, Tp - T), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nk = Tp // bk
+
+    qf = q.astype(jnp.float32) * scale
+    kb = k.reshape(B, Hkv, nk, bk, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nk, bk, Dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(S)
+    m0 = jnp.full((B, Hq, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, S, Dv), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp                                  # (B,Hkv,bk,D)
+        kj = jnp.repeat(kj.astype(jnp.float32), g, axis=1)
+        vj = jnp.repeat(vj.astype(jnp.float32), g, axis=1)
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kj)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * bk + jnp.arange(bk)
+        mask = (k_pos[None, :] < eff_len)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, vj)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nk), kb, vb),
+        unroll=nk if _unroll_default() else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, kv_len, window=None, softcap=None,
+                     scale=None, k_positions=None):
+    """Single-token decode: q (B, Hq, 1, D) against a (B, Hkv, T, D) cache.
+
+    One pass, memory-bound.  By default cache slot t holds absolute
+    position t and positions >= kv_len are masked; a rolling (windowed)
+    cache passes explicit ``k_positions`` (B, T) with -1 for empty slots.
+    The query's absolute position is kv_len - 1.
+    """
+    B, Hq, _, D = q.shape
+    _, Hkv, T, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    # grouped-query einsums, NOT jnp.repeat: repeat breaks GSPMD's
+    # propagation of a sequence-sharded cache (it would gather T).
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qf, kf)            # (B,Hkv,g,T)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.asarray(kv_len, jnp.int32) - 1
+    if k_positions is None:
+        k_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    else:
+        k_pos = jnp.asarray(k_positions, jnp.int32)
+    k_pos = k_pos[:, None, None, :]                      # (B,1,1,T)
+    qp = jnp.reshape(jnp.broadcast_to(q_pos, (B,)), (-1, 1, 1, 1))
+    mask = (k_pos >= 0) & (k_pos <= qp)
+    if window is not None:
+        mask = mask & ((qp - k_pos) < window)
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, vf) / jnp.maximum(
+        jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return out.reshape(B, Hq, 1, Dv).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for flash attention (naive O(S^2) materialization).
+
+Semantics shared by all implementations:
+  - GQA: Hq = g * Hkv, query head h attends with kv head h // g.
+  - causal mask with absolute positions: q position = q_offset + i.
+  - optional sliding window: attend iff 0 <= q_pos - k_pos < window.
+  - optional logit softcap (gemma2): l = cap * tanh(l / cap).
+  - optional kv_len: keys at positions >= kv_len are masked (padding /
+    decode with a partially-filled cache).
+All accumulation in float32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  kv_len=None, q_offset=0, scale=None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D) -> (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    g = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = q_offset + jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    out = jnp.einsum("bhst,bhtd->bhsd", _softmax(logits), vf)
+    return out.astype(q.dtype)

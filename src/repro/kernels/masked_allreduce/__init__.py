@@ -1,0 +1,6 @@
+from .ops import masked_sum, masked_psum_crop
+from .kernel import masked_sum_pallas
+from .ref import masked_sum_ref
+
+__all__ = ["masked_sum", "masked_psum_crop", "masked_sum_pallas",
+           "masked_sum_ref"]

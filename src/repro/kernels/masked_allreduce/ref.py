@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the masked partial-image reduction
+(paper §3.2: kern_all_red_p2p_2d + the M_Omega mask applied right after)."""
+
+import jax.numpy as jnp
+
+
+def masked_sum_ref(partials, mask):
+    """partials: (G, X, Y) complex partial images; mask: (X, Y) ->
+    mask * Sum_g partials_g."""
+    return mask * jnp.sum(partials, axis=0)

@@ -1,0 +1,6 @@
+from .ops import mlstm_scan, mlstm_chunkwise, mlstm_step
+from .ref import mlstm_ref, init_state
+from .kernel import mlstm_pallas
+
+__all__ = ["mlstm_scan", "mlstm_chunkwise", "mlstm_step", "mlstm_ref",
+           "mlstm_pallas", "init_state"]

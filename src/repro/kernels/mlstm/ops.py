@@ -1,0 +1,128 @@
+"""mLSTM chunkwise-parallel form (pure JAX) + backend dispatch.
+
+The chunkwise form turns the sequential cell into per-chunk matmuls
+(MXU work) plus one state hand-off per chunk — the linear-attention
+factorization that makes mLSTM trainable at sequence length.  The Pallas
+kernel (kernel.py) runs the same math with the state in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import init_state, mlstm_ref
+
+NEG = -1e30
+
+
+def _unroll_default() -> bool:
+    # see flash_attention.ops._unroll_default (dry-run cost honesty)
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk=128):
+    """Chunkwise-parallel mLSTM.  Shapes as in ref.py."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = init_state(B, H, dk, dv)
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        padf = lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, pad)] +
+                                 [(0, 0)] * (x.ndim - 3))
+        q, k, v, log_i, log_f = map(padf, (q, k, v, log_i, log_f))
+    Sp = S + pad
+    nC = Sp // L
+
+    qf = q.astype(jnp.float32) * (dk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    lf = log_f.astype(jnp.float32)
+    if pad:  # padded steps: f=1 (log 1 = 0), i = -inf -> no-ops
+        mask = jnp.arange(Sp) < S
+        li = jnp.where(mask, li, NEG)
+        lf = jnp.where(mask, lf, 0.0)
+
+    def chunk_fn(carry, xs):
+        C, n, m = carry                      # (B,H,dk,dv), (B,H,dk), (B,H)
+        qc, kc, vc, lic, lfc = xs            # (B,H,L,*)
+        c = jnp.cumsum(lfc, axis=-1)         # inclusive logf cumsum
+        # intra-chunk log weights W[t,s] = c_t - c_s + li_s  (s <= t)
+        Wmat = c[..., :, None] - c[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        Wmat = jnp.where(tri, Wmat, NEG)
+        m_intra = jnp.max(Wmat, axis=-1)                   # (B,H,L)
+        m_inter = c + m[..., None]                         # (B,H,L)
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(Wmat - m_t[..., None])                 # decay matrix
+        scores = jnp.einsum("bhtk,bhsk->bhts", qc, kc) * D
+        h_num = jnp.einsum("bhts,bhsv->bhtv", scores, vc)
+        h_num += jnp.exp(m_inter - m_t)[..., None] * \
+            jnp.einsum("bhtk,bhkv->bhtv", qc, C)
+        n_t = jnp.einsum("bhts,bhsk->bhtk", D, kc)
+        n_t += jnp.exp(m_inter - m_t)[..., None] * n[..., None, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhtk,bhtk->bht", qc, n_t)),
+                          jnp.exp(-m_t))
+        h = h_num / den[..., None]
+        # -- state hand-off
+        cL = c[..., -1:]                                    # (B,H,1)
+        w_out = cL - c + lic                                # (B,H,L)
+        m_new = jnp.maximum(cL[..., 0] + m, jnp.max(w_out, axis=-1))
+        scale_old = jnp.exp(cL[..., 0] + m - m_new)
+        wk = jnp.exp(w_out - m_new[..., None])
+        C = scale_old[..., None, None] * C + \
+            jnp.einsum("bhs,bhsk,bhsv->bhkv", wk, kc, vc)
+        n = scale_old[..., None] * n + jnp.einsum("bhs,bhsk->bhk", wk, kc)
+        return (C, n, m_new), h
+
+    xs = tuple(x.reshape(B, H, nC, L, *x.shape[3:]).transpose(
+        2, 0, 1, 3, *range(4, x.ndim + 1)) for x in (qf, kf, vf, li, lf))
+    (C, n, m), hs = jax.lax.scan(chunk_fn, state, xs,
+                                 unroll=nC if _unroll_default() else 1)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sp, dv)[:, :, :S]
+    return h.astype(v.dtype), (C, n, m)
+
+
+def mlstm_scan(q, k, v, log_i, log_f, state=None, impl="auto", chunk=None):
+    if chunk is None:
+        chunk = int(os.environ.get("REPRO_MLSTM_CHUNK", "128"))
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunkwise"
+    if impl == "pallas":
+        from .kernel import mlstm_pallas
+        return mlstm_pallas(q, k, v, log_i, log_f, state,
+                            chunk=chunk, interpret=not _on_tpu())
+    if impl == "chunkwise":
+        return mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk=chunk)
+    if impl == "ref":
+        return mlstm_ref(q, k, v, log_i, log_f, state)
+    raise ValueError(impl)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step; q,k (B,H,dk), v (B,H,dv), gates (B,H)."""
+    C, n, m = state
+    dk = q.shape[-1]
+    qf = q.astype(jnp.float32) * (dk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fs = jnp.exp(log_f + m - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    C = fs[..., None, None] * C + is_[..., None, None] * \
+        kf[..., :, None] * vf[..., None, :]
+    n = fs[..., None] * n + is_[..., None] * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(v.dtype)
+    return h, (C, n, m_new)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the mLSTM cell (xLSTM): sequential stabilized scan.
+
+Shapes: q, k (B, H, S, dk); v (B, H, S, dv); log_i, log_f (B, H, S).
+State: C (B, H, dk, dv), n (B, H, dk), m (B, H); stored state is scaled
+so that C_true = C * exp(m) (log-space stabilization from the paper).
+
+    m_t = max(log_f_t + m_{t-1}, log_i_t)
+    C_t = exp(log_f_t + m_{t-1} - m_t) C_{t-1} + exp(log_i_t - m_t) k_t v_t^T
+    n_t = exp(log_f_t + m_{t-1} - m_t) n_{t-1} + exp(log_i_t - m_t) k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlstm_ref(q, k, v, log_i, log_f, state=None):
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = init_state(B, H, dk, dv)
+    C0, n0, m0 = state
+    qf = q.astype(jnp.float32) * (dk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    li, lf = log_i.astype(jnp.float32), log_f.astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs
+        m_new = jnp.maximum(lft + m, lit)
+        fs = jnp.exp(lft + m - m_new)[..., None]
+        is_ = jnp.exp(lit - m_new)[..., None]
+        C = fs[..., None] * C + is_[..., None] * kt[..., :, None] * vt[..., None, :]
+        n = fs * n + is_ * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (jnp.moveaxis(qf, 2, 0), jnp.moveaxis(kf, 2, 0),
+          jnp.moveaxis(vf, 2, 0), jnp.moveaxis(li, 2, 0),
+          jnp.moveaxis(lf, 2, 0))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 2).astype(v.dtype)
+    return h, (C, n, m)
+
+
+def init_state(B, H, dk, dv):
+    return (jnp.zeros((B, H, dk, dv), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))

@@ -1,0 +1,5 @@
+from .ops import rg_lru_scan, rg_lru_step
+from .kernel import rg_lru_pallas
+from .ref import rg_lru_ref
+
+__all__ = ["rg_lru_scan", "rg_lru_step", "rg_lru_pallas", "rg_lru_ref"]

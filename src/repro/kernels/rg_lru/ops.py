@@ -1,0 +1,52 @@
+"""jit'd wrapper for the RG-LRU scan with backend dispatch.
+
+  pallas       TPU kernel (interpret on CPU),
+  associative  jax.lax.associative_scan (log-depth; XLA path used on CPU
+               and for the dry-run — same FLOP/byte class),
+  ref          sequential lax.scan oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rg_lru_pallas
+from .ref import rg_lru_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def rg_lru_scan(log_a, b, h0, impl="auto"):
+    """h_t = exp(log_a_t) h_{t-1} + b_t.  Shapes: (B,S,W), h0 (B,W)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "associative"
+    if impl == "pallas":
+        return rg_lru_pallas(log_a, b, h0, interpret=not _on_tpu())
+    if impl == "associative":
+        return _assoc(log_a, b, h0)
+    if impl == "ref":
+        return rg_lru_ref(log_a, b, h0)
+    raise ValueError(impl)
+
+
+def _assoc(log_a, b, h0):
+    laf = log_a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    # fold h0 into the first step: b_0 <- a_0 * h0 + b_0
+    bf = bf.at[:, 0].add(jnp.exp(laf[:, 0]) * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        (la1, b1), (la2, b2) = x, y
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    la_c, h = jax.lax.associative_scan(combine, (laf, bf), axis=1)
+    return h.astype(b.dtype), h[:, -1].astype(b.dtype)
+
+
+def rg_lru_step(log_a, b, h):
+    """Single decode step: (B,W) each."""
+    return (jnp.exp(log_a.astype(jnp.float32)) * h.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(b.dtype)

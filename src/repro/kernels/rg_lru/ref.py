@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence (RecurrentGemma).
+
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(log_a_t)
+
+log_a, b: (B, S, W); h0: (B, W).  Returns (h: (B, S, W), h_last).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_ref(log_a, b, h0):
+    def step(h, ab):
+        la, bt = ab
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(log_a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32))
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype), h_last.astype(b.dtype)

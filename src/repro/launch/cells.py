@@ -1,0 +1,175 @@
+"""Build + lower one (architecture x input-shape x mesh) dry-run cell.
+
+Shared by dryrun.py (compile + record) and the perf loop.  Everything is
+ShapeDtypeStruct-based — no parameter/cache allocation ever happens.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, cell_applicable, get_config
+from ..models import frontends, transformer
+from ..train.trainer import make_train_step, make_train_state, \
+    state_shardings
+from .mesh import mesh_axes
+
+
+def _bspec(axes):
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _sh(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _to_named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def expert_pad_for(cfg, mesh):
+    tpn = mesh.shape.get("model", 1)
+    return tpn if (cfg.n_experts and cfg.n_experts % tpn) else 1
+
+
+def build_cell(arch: str, shape: str, mesh, *, remat=True,
+               act_sp=True, overrides=None, policy="fsdp_tp"):
+    """Returns (lowered, meta) or (None, skip_reason).
+
+    ``policy``: "fsdp_tp" (2-D: FSDP over data/pod + TP over model) or
+    "pure_fsdp" (every axis is a data/FSDP axis; no tensor parallelism —
+    the right split for small-d models where TP is all overhead).  The
+    MGPU lesson: the segmentation policy is a per-workload choice.
+    """
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return None, reason
+
+    seq, gbatch, kind = SHAPES[shape]
+    fsdp, tp = mesh_axes(mesh)
+    if policy == "pure_fsdp":
+        fsdp = tuple(mesh.axis_names)
+        tp = None
+    tpn = mesh.shape.get("model", 1)
+    epad = expert_pad_for(cfg, mesh)
+    bt = _bspec(fsdp)
+    nbatch = int(np.prod([mesh.shape[a] for a in fsdp]))
+    batch_ok = gbatch % nbatch == 0
+    bspec = bt if batch_ok else None         # batch=1 cells: replicate
+
+    meta = dict(arch=arch, shape=shape, kind=kind, seq=seq, gbatch=gbatch,
+                mesh=dict(mesh.shape), expert_pad=epad,
+                batch_sharded=batch_ok, policy=policy)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(
+        lambda: transformer.init_params(cfg, key, expert_pad=epad))
+    pspec = transformer.param_pspecs(cfg, params_sds, dict(mesh.shape),
+                                     tp=tp, fsdp=fsdp)
+    param_sh = _to_named(mesh, pspec)
+    rep = _sh(mesh)
+    tok_sh = _sh(mesh, bspec, None)
+    enc_sds = frontends.frontend_struct(cfg, gbatch, cfg.cdtype)
+    enc_sh = _sh(mesh, bspec, None, None) if enc_sds is not None else None
+    if act_sp and tp and seq % tpn == 0 and kind != "decode":
+        act = _sh(mesh, bspec, "model", None)   # Megatron SP
+    elif kind != "decode":
+        act = _sh(mesh, bspec, None, None)      # batch-sharded residual
+    else:
+        act = None
+
+    if kind == "train":
+        state_sds = jax.eval_shape(
+            lambda: make_train_state(cfg, key, expert_pad=epad))
+        st_sh = state_shardings(cfg, state_sds, mesh, fsdp=fsdp, tp=tp)
+        step_fn, _ = make_train_step(cfg, mesh, remat=remat, fsdp=fsdp,
+                                     tp=tp, batch_axes=fsdp,
+                                     act_sharding=act)
+        tok = jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)
+        with mesh:
+            if enc_sds is None:
+                fn = lambda st, t, l: step_fn(st, t, l, None)
+                jitted = jax.jit(fn, in_shardings=(st_sh, tok_sh, tok_sh),
+                                 out_shardings=(st_sh, rep),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(state_sds, tok, tok)
+            else:
+                fn = lambda st, t, l, e: step_fn(st, t, l, e)
+                jitted = jax.jit(fn,
+                                 in_shardings=(st_sh, tok_sh, tok_sh, enc_sh),
+                                 out_shardings=(st_sh, rep),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(state_sds, tok, tok, enc_sds)
+        return lowered, meta
+
+    cache_sds = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, gbatch, seq, cfg.cdtype))
+    cspec = transformer.cache_pspecs(cfg, cache_sds, dict(mesh.shape),
+                                     tp=tp, batch=fsdp if batch_ok else ())
+    cache_sh = _to_named(mesh, cspec)
+
+    if kind == "prefill":
+        def prefill_step(params, tokens, enc=None):
+            cache = transformer.init_cache(cfg, gbatch, seq, cfg.cdtype)
+            logits, cache, _ = transformer.apply(
+                cfg, params, tokens, enc=enc, mode="prefill", pos=0,
+                cache=cache, act_sharding=act, logits_window=1)
+            return logits[:, -1], cache
+
+        tok = jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)
+        with mesh:
+            if enc_sds is None:
+                jitted = jax.jit(lambda p, t: prefill_step(p, t),
+                                 in_shardings=(param_sh, tok_sh),
+                                 out_shardings=(rep, cache_sh))
+                lowered = jitted.lower(params_sds, tok)
+            else:
+                jitted = jax.jit(prefill_step,
+                                 in_shardings=(param_sh, tok_sh, enc_sh),
+                                 out_shardings=(rep, cache_sh))
+                lowered = jitted.lower(params_sds, tok, enc_sds)
+        return lowered, meta
+
+    if kind == "decode":
+        def decode_step(params, cache, tokens, pos):
+            logits, cache, _ = transformer.apply(
+                cfg, params, tokens, enc=None, mode="decode", pos=pos,
+                cache=cache)
+            return logits[:, -1], cache
+
+        tok = jax.ShapeDtypeStruct((gbatch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            jitted = jax.jit(decode_step,
+                             in_shardings=(param_sh, cache_sh, tok_sh, rep),
+                             out_shardings=(rep, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok, pos)
+        return lowered, meta
+
+    raise ValueError(kind)
+
+
+def model_flops(arch: str, shape: str) -> dict:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (N = active
+    params; D = tokens processed per step)."""
+    cfg = get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    n_active = transformer.param_count(cfg, active_only=True)
+    n_total = transformer.param_count(cfg)
+    tokens = gbatch * (seq if kind in ("train", "prefill") else 1)
+    mult = 6 if kind == "train" else 2
+    return {"n_total": n_total, "n_active": n_active,
+            "tokens_per_step": tokens,
+            "model_flops": mult * n_active * tokens}

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init, and the production meshes below need 512 placeholder devices.
+# inner-scan unrolling is toggled per compile by launch.costing: ON for
+# the shallow costing compiles (truthful FLOP counts), OFF for the
+# full-depth compile (memory_analysis + compile proof, 1-core budget).
+os.environ.setdefault("REPRO_UNROLL_SCANS", "0")
+# bigger blocks -> fewer unrolled inner-scan steps -> tractable compile
+# times at 512 devices (same math; block size is a costing knob only)
+os.environ.setdefault("REPRO_BLOCK_K", "1024")
+os.environ.setdefault("REPRO_MLSTM_CHUNK", "1024")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, print memory/cost analysis, record roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out results/dryrun
+
+Proves, without hardware: the sharding config is coherent (no mismatched
+collectives), every cell fits per-chip HBM, and yields the per-device
+FLOP/byte/collective numbers EXPERIMENTS.md §Roofline reads.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from .cells import build_cell, model_flops
+from .costing import cell_cost
+from .mesh import make_production_mesh
+from .roofline import collective_summary, parse_collectives, roofline_terms
+
+
+def run_cell(arch, shape, mesh, mesh_name, *, act_sp=True,
+             policy="fsdp_tp"):
+    t0 = time.time()
+    multi = "pod" in mesh.shape
+    # full-depth compile: the lower/compile proof + memory_analysis
+    # (scans kept, inner scans not unrolled -> tractable on one core)
+    lowered, meta = build_cell(arch, shape, mesh, act_sp=act_sp,
+                               policy=policy)
+    if lowered is None:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "skipped": meta}
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    mem = {"argument_bytes": ma.argument_size_in_bytes,
+           "output_bytes": ma.output_size_in_bytes,
+           "temp_bytes": ma.temp_size_in_bytes,
+           "alias_bytes": ma.alias_size_in_bytes}
+    print(f"  memory_analysis: arg={mem['argument_bytes']/2**30:.2f}GiB "
+          f"temp={mem['temp_bytes']/2**30:.2f}GiB "
+          f"out={mem['output_bytes']/2**30:.2f}GiB "
+          f"alias={mem['alias_bytes']/2**30:.2f}GiB")
+    rec = {**meta, "mesh_name": mesh_name, "memory": mem}
+
+    if multi:
+        # the multi-pod pass proves the pod axis shards; §Roofline is
+        # single-pod, so report raw (count-while-once) collectives only
+        cs = collective_summary(parse_collectives(compiled.as_text()),
+                                pod_group=2)
+        rec["collectives_counted_once"] = cs
+        print(f"  multi-pod compile OK; dcn_wire(once)="
+              f"{cs['dcn_wire_bytes']:.3e}B")
+    else:
+        cost = cell_cost(arch, shape, mesh, compiled, act_sp=act_sp,
+                         policy=policy)
+        mf = model_flops(arch, shape)
+        terms = roofline_terms(cost, cost["colls"], multi_pod=False)
+        rec.update({
+            "flops": cost["flops"], "bytes": cost["bytes"],
+            "hlo_bytes_raw": cost["hlo_bytes"],
+            "slstm_analytic_flops": cost["slstm_analytic_flops"],
+            "hbm_model": cost["hbm_model"],
+            "depth_correction": cost["depth_correction"],
+            "collectives": collective_summary(cost["colls"]),
+            "roofline": {k: v for k, v in terms.items()
+                         if k != "collectives"},
+            **mf,
+            "model_vs_hlo": (mf["model_flops"] / mesh.size) /
+                            max(cost["flops"], 1.0),
+        })
+        print(f"  cost_analysis: flops={cost['flops']:.3e} "
+              f"bytes={cost['bytes']:.3e} "
+              f"coll_ici={rec['collectives']['ici_wire_bytes']:.3e}B")
+        print(f"  roofline: compute={terms['t_compute_s']*1e3:.2f}ms "
+              f"memory={terms['t_memory_s']*1e3:.2f}ms "
+              f"collective={terms['t_collective_s']*1e3:.2f}ms "
+              f"dominant={terms['dominant']}")
+    rec["compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-act-sp", action="store_true",
+                    help="disable sequence-parallel activation sharding")
+    ap.add_argument("--policy", default="fsdp_tp",
+                    choices=["fsdp_tp", "pure_fsdp"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"_{args.tag}" if args.tag else ""
+                fn = out / f"{arch}__{shape}__{mesh_name}{tag}.json"
+                if fn.exists() and not args.force:
+                    print(f"[skip existing] {fn.name}")
+                    continue
+                print(f"[{mesh_name}] {arch} x {shape}")
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   act_sp=not args.no_act_sp,
+                                   policy=args.policy)
+                    fn.write_text(json.dumps(rec, indent=1))
+                    if "skipped" in rec:
+                        print(f"  SKIPPED: {rec['skipped']}")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mesh_name, arch, shape, repr(e)))
+                    print("  FAILED:", repr(e))
+                    traceback.print_exc(limit=3)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets the host
+device count before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (TPU v5e); 2 pods over DCN when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(mesh):
+    names = tuple(mesh.axis_names)
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return fsdp, tp

@@ -1,0 +1,96 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from ..configs import ARCH_IDS, SHAPES
+
+
+def load(dir_):
+    recs = {}
+    for fn in sorted(pathlib.Path(dir_).glob("*.json")):
+        d = json.loads(fn.read_text())
+        mesh = d.get("mesh_name") or d.get("mesh", "?")
+        mesh = mesh if isinstance(mesh, str) else "?"
+        recs[(d["arch"], d["shape"], mesh)] = d
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    lines = [
+        "| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+        "HLO GFLOP/dev | model/HLO | HBM GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING "
+                             "| | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | - | - | - | "
+                             f"SKIP ({r['skipped'][:40]}) | | | | |")
+                continue
+            t = r["roofline"]
+            mem = r["memory"]
+            per_dev = (mem["argument_bytes"] + mem["temp_bytes"] +
+                       mem["output_bytes"] - mem["alias_bytes"])
+            fits = "Y" if per_dev < 16 * 2**30 else "N"
+            lines.append(
+                f"| {arch} | {shape} | {t['t_compute_s']*1e3:.2f} | "
+                f"{t['t_memory_s']*1e3:.2f} | {t['t_collective_s']*1e3:.2f} | "
+                f"{t['dominant']} | {r['flops']/1e9:.1f} | "
+                f"{r['model_vs_hlo']:.2f} | {per_dev/2**30:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def multipod_table(recs, mesh="pod2x16x16"):
+    lines = [
+        "| arch | shape | compile | arg GiB | temp GiB | dcn wire (once) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | SKIP | | | |")
+                continue
+            mem = r["memory"]
+            dcn = r.get("collectives_counted_once", {}).get(
+                "dcn_wire_bytes", 0.0)
+            lines.append(
+                f"| {arch} | {shape} | OK ({r['compile_s']}s) | "
+                f"{fmt_bytes(mem['argument_bytes'])} | "
+                f"{fmt_bytes(mem['temp_bytes'])} | {dcn:.2e} B |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Single-pod roofline (16x16)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n## Multi-pod compile pass (2x16x16)\n")
+    print(multipod_table(recs))
+
+
+if __name__ == "__main__":
+    main()

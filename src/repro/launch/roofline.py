@@ -1,0 +1,115 @@
+"""Roofline term derivation from a compiled dry-run cell.
+
+  compute term    = HLO_FLOPs(per-device SPMD program) / peak_FLOP/s
+  memory term     = HLO_bytes(per-device) / HBM_bw
+  collective term = wire bytes per device (ring model) / ICI link bw
+
+cost_analysis() describes the per-device SPMD program (verified in the
+512-device spike: global/512), so no chip division is needed.
+collective bytes are parsed from the compiled HLO text; each op's wire
+traffic uses the standard ring model on its replica-group size n:
+
+  all-reduce      2 B (n-1)/n        all-gather      B (n-1)/n
+  reduce-scatter  B_out (n-1)        all-to-all      B (n-1)/n
+  collective-permute  B
+
+DCN (pod-axis) collectives are separated by group-size-2 heuristic on
+the (2,16,16) mesh and costed at dcn_bw.
+"""
+
+from __future__ import annotations
+
+import re
+
+from ..core.runtime import HW
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]|\{\{([\d,]+)\}?)")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """One record per collective op in the per-device program."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_s, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_s)
+        g = _GROUPS_RE.search(line)
+        if g:
+            if g.group(2) is not None:          # iota [G,S]<=...
+                n = int(g.group(2))
+            else:                               # explicit {{0,1,..},..}
+                n = len(g.group(3).split(","))
+        else:
+            n = 1
+        if n <= 1:
+            continue
+        wire = {
+            "all-reduce": 2 * nbytes * (n - 1) / n,
+            "all-gather": nbytes * (n - 1) / n,
+            "reduce-scatter": nbytes * (n - 1),
+            "all-to-all": nbytes * (n - 1) / n,
+            "collective-permute": float(nbytes),
+        }[kind]
+        out.append({"kind": kind, "bytes": nbytes, "group": n,
+                    "wire_bytes": wire})
+    return out
+
+
+def collective_summary(colls: list[dict], pod_group: int | None = None) -> dict:
+    """pod_group: replica-group size that indicates a DCN (pod-axis)
+    collective — only meaningful on the multi-pod mesh (size-2 pod axis);
+    pass None on single-pod meshes (all traffic is ICI)."""
+    s = {"ici_wire_bytes": 0.0, "dcn_wire_bytes": 0.0, "by_kind": {}}
+    for c in colls:
+        tgt = "dcn_wire_bytes" if (pod_group and c["group"] == pod_group) \
+            else "ici_wire_bytes"
+        s[tgt] += c["wire_bytes"]
+        k = s["by_kind"].setdefault(c["kind"], {"count": 0, "wire": 0.0})
+        k["count"] += 1
+        k["wire"] += c["wire_bytes"]
+    return s
+
+
+def roofline_terms(cost: dict, colls: list[dict], *, multi_pod=False) -> dict:
+    flops = float(cost.get("flops", cost.get("flops", 0.0)))
+    bytes_acc = float(cost.get("bytes", cost.get("bytes accessed", 0.0)))
+    cs = collective_summary(colls, pod_group=2 if multi_pod else None)
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    t_coll = cs["ici_wire_bytes"] / HW["ici_bw"]
+    if multi_pod:
+        t_coll += cs["dcn_wire_bytes"] / HW["dcn_bw"]
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_coll, "collectives": cs}
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    terms["dominant"] = dom[0]
+    terms["step_time_bound_s"] = dom[1]
+    return terms

@@ -1,0 +1,122 @@
+"""Production training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \\
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On a real pod each host runs this under the cluster launcher (see
+launch_pod.sh); jax.distributed wires the hosts together.  On CPU it
+trains reduced configs end-to-end (examples/train_lm.py uses it).
+Fault tolerance: resume-from-latest, periodic + preemption-flush
+checkpoints, straggler logging, restart envelope.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..ckpt import latest_step, restore_sharded, save
+from ..configs import ARCH_IDS, get_config, get_smoke
+from ..data import TokenPipeline
+from ..ft import PreemptionGuard, RestartPolicy, StragglerWatchdog, \
+    run_with_restarts
+from ..models import frontends
+from ..train import make_train_state, make_train_step, state_shardings
+
+
+def build(args):
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.dtype:
+        cfg = dataclasses.replace(cfg, compute_dtype=args.dtype)
+    ndev = len(jax.devices())
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x")) \
+        if args.mesh else (ndev,)
+    axes = ("data", "model")[: len(mesh_shape)]
+    mesh = jax.make_mesh(mesh_shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return cfg, mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, mesh = build(args)
+    fsdp = tuple(a for a in ("data",) if a in mesh.shape)
+    step_fn, _ = make_train_step(
+        cfg, mesh, base_lr=args.lr, warmup=min(20, args.steps // 10 + 1),
+        total=args.steps, microbatches=args.microbatches,
+        remat=False, fsdp=fsdp, donate=False)
+    jstep = jax.jit(step_fn)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                         seed=args.seed,
+                         n_hosts=jax.process_count(),
+                         host_id=jax.process_index())
+    guard = PreemptionGuard()
+    watchdog = StragglerWatchdog()
+
+    def train_loop(_start):
+        with mesh:
+            state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
+            start = 0
+            if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+                sh = jax.tree.map(
+                    lambda x: NamedSharding(mesh, P()), state)
+                state, start = restore_sharded(args.ckpt_dir, state, sh)
+                print(f"resumed from step {start}")
+            losses = []
+            for step in range(start, args.steps):
+                t0 = time.time()
+                tok, lab = pipe.batch_at(step)
+                state, metrics = jstep(state, jnp.asarray(tok),
+                                       jnp.asarray(lab), None)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                dt = time.time() - t0
+                if watchdog.record(dt):
+                    print(f"[straggler] step {step}: {dt:.2f}s "
+                          f"(median {watchdog.median:.2f}s)")
+                if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                    save(args.ckpt_dir, step + 1, state, blocking=False)
+                if args.ckpt_dir and guard.maybe_flush(
+                        args.ckpt_dir, step + 1, state):
+                    print("preempted: checkpoint flushed")
+                    return step + 1
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    tput = args.batch * args.seq / dt
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"gnorm {float(metrics['gnorm']):.3f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"{tput:,.0f} tok/s")
+            if args.ckpt_dir:
+                save(args.ckpt_dir, args.steps, state, blocking=True)
+            print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+            return args.steps
+
+    run_with_restarts(train_loop, policy=RestartPolicy(max_restarts=3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .config import ModelConfig
+from . import attention, frontends, layers, moe, recurrent, transformer
+from .transformer import (apply, init_cache, init_params, layer_groups,
+                          param_count, param_pspecs, cache_pspecs)
+
+__all__ = ["ModelConfig", "apply", "init_cache", "init_params",
+           "layer_groups", "param_count", "param_pspecs", "cache_pspecs",
+           "attention", "frontends", "layers", "moe", "recurrent",
+           "transformer"]

@@ -1,0 +1,279 @@
+"""Attention variants: GQA (global/local window), MLA, cross-attention.
+
+Pure functions: ``init(cfg, key, kind)`` -> params pytree;
+``apply(cfg, p, x, kind, mode, ...)`` -> (y, new_cache).
+
+Modes:
+  train    full sequence, no cache returned
+  prefill  full sequence, returns a cache sized ``max_len``
+  decode   single token at position ``pos`` (uniform over batch), reads
+           and updates the cache
+
+Cache layouts (per layer):
+  attn   {"k","v": (B, Hkv, T, hd)}            T = max_len
+  local  {"k","v": (B, Hkv, W, hd)}            rolling, slot = t % W
+  mla    {"ckv": (B, T, r), "kr": (B, T, rope_dim)}   latent cache
+  cross  {"k","v": (B, Hkv, T_enc, hd)}        static after prefill
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.flash_attention import (chunked_attention, decode_attention,
+                                       flash_attention)
+from .layers import dense_init, hint, rms_norm, rope, wuse
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init(cfg, key, kind):
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = iter(jax.random.split(key, 12))
+    if kind == "mla":
+        r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+        nope, ropd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        p = {
+            "wdkv": dense_init(next(ks), (d, r)),
+            "kv_norm": jnp.ones((r,), jnp.float32),
+            "wkr": dense_init(next(ks), (d, ropd)),
+            "wuk": dense_init(next(ks), (r, H * nope)),
+            "wuv": dense_init(next(ks), (r, H * vd)),
+            "wo": dense_init(next(ks), (H * vd, d)),
+        }
+        if qr:
+            p["wdq"] = dense_init(next(ks), (d, qr))
+            p["q_norm"] = jnp.ones((qr,), jnp.float32)
+            p["wuq"] = dense_init(next(ks), (qr, H * (nope + ropd)))
+        else:
+            p["wq"] = dense_init(next(ks), (d, H * (nope + ropd)))
+        return p
+    p = {
+        "wq": dense_init(next(ks), (d, H * hd)),
+        "wk": dense_init(next(ks), (d, Hkv * hd)),
+        "wv": dense_init(next(ks), (d, Hkv * hd)),
+        "wo": dense_init(next(ks), (H * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if kind == "cross":
+        p["gate"] = jnp.zeros((), jnp.float32)   # gated cross-attn (vlm)
+    return p
+
+
+def init_cache(cfg, kind, batch, max_len, dtype):
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    if kind == "local":
+        W = min(cfg.window, max_len)
+        return {"k": jnp.zeros((batch, Hkv, W, hd), dtype),
+                "v": jnp.zeros((batch, Hkv, W, hd), dtype)}
+    if kind == "mla":
+        return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+    if kind == "cross":
+        T = cfg.encoder_seq
+        return {"k": jnp.zeros((batch, Hkv, T, hd), dtype),
+                "v": jnp.zeros((batch, Hkv, T, hd), dtype)}
+    return {"k": jnp.zeros((batch, Hkv, max_len, hd), dtype),
+            "v": jnp.zeros((batch, Hkv, max_len, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+def _maybe_qk_norm(cfg, p, q, k):
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def apply(cfg, p, x, kind, mode, *, pos=0, cache=None, enc=None):
+    """x: (B, S, d).  Returns (y, new_cache)."""
+    if kind == "mla":
+        return _apply_mla(cfg, p, x, mode, pos=pos, cache=cache)
+    if kind == "cross":
+        return _apply_cross(cfg, p, x, mode, cache=cache, enc=enc)
+
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    window = cfg.window if kind == "local" else None
+    dt = x.dtype
+
+    q = _split_heads(x @ wuse(p["wq"], dt), H)
+    k = _split_heads(x @ wuse(p["wk"], dt), Hkv)
+    v = _split_heads(x @ wuse(p["wv"], dt), Hkv)
+    q, k = _maybe_qk_norm(cfg, p, q, k)
+
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    else:
+        positions = (pos + jnp.arange(S, dtype=jnp.int32))[None]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        T = cache["k"].shape[2]
+        if kind == "local":
+            slot = pos % T
+        else:
+            slot = pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        if kind == "local":
+            idx = jnp.arange(T)
+            k_positions = pos - ((pos - idx) % T)        # slot -> abs pos
+            k_positions = jnp.broadcast_to(k_positions[None], (B, T))
+        else:
+            k_positions = None
+        # flash-decode: q is tiny — replicate it over TP so GSPMD keeps
+        # the cache sequence-sharded (partial softmax + small psums)
+        # rather than gathering the (B,Hkv,T,hd) cache.
+        q = hint(q, None, None, None, None)
+        o = decode_attention(q, ck.astype(dt), cv.astype(dt),
+                             kv_len=jnp.full((B,), pos + 1, jnp.int32),
+                             window=window, softcap=cfg.attn_softcap,
+                             k_positions=k_positions)
+    else:
+        o = flash_attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.attn_softcap, q_offset=pos)
+        if mode == "prefill":
+            new_cache = _write_prefill_cache(cfg, kind, cache, k, v, pos, S)
+
+    y = _merge_heads(o) @ wuse(p["wo"], dt)
+    return y, new_cache
+
+
+def _write_prefill_cache(cfg, kind, cache, k, v, pos, S):
+    """Write prefilled k/v (positions pos..pos+S) into the cache."""
+    T = cache["k"].shape[2]
+    if kind == "local" and S >= T:
+        # rolling cache: keep the last T positions, slot = t % T
+        tail_k, tail_v = k[:, :, -T:], v[:, :, -T:]
+        start = pos + S - T
+        idx = (start + jnp.arange(T)) % T
+        ck = cache["k"].at[:, :, idx].set(tail_k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, idx].set(tail_v.astype(cache["v"].dtype))
+        return {"k": ck, "v": cv}
+    slot = pos % T if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention; deepseek-v2 / minicpm3)
+# ---------------------------------------------------------------------------
+
+def _apply_mla(cfg, p, x, mode, *, pos=0, cache=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    nope, ropd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(nope + ropd)
+
+    # -- queries
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ wuse(p["wdq"], dt), p["q_norm"], cfg.norm_eps)
+        q = cq @ wuse(p["wuq"], dt)
+    else:
+        q = x @ wuse(p["wq"], dt)
+    q = _split_heads(q, H)                                  # (B,H,S,nope+ropd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    # -- latent kv + shared rope key
+    ckv = rms_norm(x @ wuse(p["wdkv"], dt), p["kv_norm"], cfg.norm_eps)
+    kr = (x @ wuse(p["wkr"], dt))[:, None]                 # (B,1,S,ropd)
+
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    else:
+        positions = (pos + jnp.arange(S, dtype=jnp.int32))[None]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kr = rope(kr, positions, cfg.rope_theta)
+    kr = kr[:, 0]                                           # (B,S,ropd)
+
+    new_cache = cache
+    if mode == "decode":
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(cache["kr"].dtype), pos, axis=1)
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+        ckv_ctx, kr_ctx = ckv_all.astype(dt), kr_all.astype(dt)
+        kv_len = pos + 1
+    else:
+        ckv_ctx, kr_ctx = ckv, kr
+        kv_len = None
+        if mode == "prefill":
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), pos, axis=1)
+            new_cache = {"ckv": ckv_all, "kr": kr_all}
+
+    # up-project context latents to per-head keys/values
+    T = ckv_ctx.shape[1]
+    k_nope = _split_heads(ckv_ctx @ wuse(p["wuk"], dt), H)   # (B,H,T,nope)
+    vv = _split_heads(ckv_ctx @ wuse(p["wuv"], dt), H)       # (B,H,T,vd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_ctx[:, None], (B, H, T, ropd))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if mode == "decode":
+        q_full = hint(q_full, None, None, None, None)   # flash-decode
+        o = decode_attention(q_full, k_full, vv,
+                             kv_len=jnp.full((B,), kv_len, jnp.int32),
+                             scale=scale)
+    else:
+        o = flash_attention(q_full, k_full, vv, causal=True, q_offset=pos,
+                            scale=scale)
+    y = _merge_heads(o) @ wuse(p["wo"], dt)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (vlm interleaved / whisper decoder)
+# ---------------------------------------------------------------------------
+
+def _apply_cross(cfg, p, x, mode, *, cache=None, enc=None):
+    """enc: (B, T_enc, d) encoder/frontend states (None in decode: use cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+
+    q = _split_heads(x @ wuse(p["wq"], dt), H)
+    if enc is not None:
+        k = _split_heads(enc.astype(dt) @ wuse(p["wk"], dt), Hkv)
+        v = _split_heads(enc.astype(dt) @ wuse(p["wv"], dt), Hkv)
+        if mode in ("prefill", "decode") and cache is not None:
+            cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype)}
+    else:
+        k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+    q, k = _maybe_qk_norm(cfg, p, q, k)
+
+    o = chunked_attention(q, k, v, causal=False)
+    y = _merge_heads(o) @ wuse(p["wo"], dt)
+    if "gate" in p:
+        y = jnp.tanh(p["gate"]).astype(dt) * y
+    return y, cache

@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers produce deterministic synthetic embeddings for smoke tests
+and ShapeDtypeStructs for the dry-run."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_shape(cfg, batch):
+    """(B, T_frontend, d_model) for archs with a frontend; else None."""
+    if cfg.encoder_seq:
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    return None
+
+
+def frontend_struct(cfg, batch, dtype=jnp.bfloat16):
+    shp = frontend_shape(cfg, batch)
+    return None if shp is None else jax.ShapeDtypeStruct(shp, dtype)
+
+
+def synthetic_frontend(cfg, batch, key=None, dtype=jnp.float32):
+    shp = frontend_shape(cfg, batch)
+    if shp is None:
+        return None
+    key = key if key is not None else jax.random.PRNGKey(7)
+    return 0.02 * jax.random.normal(key, shp, dtype)

@@ -1,0 +1,106 @@
+"""Shared model building blocks (pure JAX, functional params-in/out)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def wuse(w, dt):
+    """Weight as used by compute.  Under REPRO_ZERO3=1 (pure-FSDP /
+    ZeRO-3 policy) the sharded *storage* copy is gathered to a
+    replicated *compute* copy right before the matmul, keeping
+    activation math local — GSPMD then reduce-scatters the grads back
+    to the storage sharding."""
+    w = w.astype(dt)
+    if os.environ.get("REPRO_ZERO3") == "1":
+        w = hint(w, *([None] * w.ndim))
+    return w
+
+
+def dense_init(key, shape, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32))
+
+
+def rms_norm(x, w, eps=1e-6, offset=0.0):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (offset + w.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x: (B, H, S, D even), positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freq  # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(S, D, offset=0):
+    pos = np.arange(offset, offset + S)[:, None]
+    i = np.arange(D // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / D))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_params(key, d_model, d_ff, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], (d_model, d_ff)),
+         "down": dense_init(ks[1], (d_ff, d_model))}
+    if gated:
+        p["gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(p, x, act="silu"):
+    a = ACTS[act]
+    h = x @ wuse(p["up"], x.dtype)
+    if "gate" in p:
+        h = a(x @ wuse(p["gate"], x.dtype)) * h
+    else:
+        h = a(h)
+    return h @ wuse(p["down"], x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def hint(x, *spec):
+    """Best-effort sharding constraint using the ambient mesh's axis
+    names; a no-op outside a mesh context (smoke tests, single device).
+    Lets model code steer GSPMD at known decision points (e.g. keep the
+    decode KV cache sequence-sharded instead of gathering it)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return x
+        names = set(am.shape.keys())
+        for a in spec:
+            for ax in (a if isinstance(a, tuple) else (a,)):
+                if isinstance(ax, str) and ax not in names:
+                    return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

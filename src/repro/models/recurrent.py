@@ -1,0 +1,224 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM
+(xLSTM).  Same init/apply contract as attention.py; "cache" is the
+recurrent state (constant memory — this is what makes long_500k decode
+feasible for these archs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.mlstm import init_state as mlstm_init_state
+from ..kernels.mlstm import mlstm_scan, mlstm_step
+from ..kernels.rg_lru import rg_lru_scan, rg_lru_step
+from .layers import ACTS, dense_init, rms_norm
+
+C_RGLRU = 8.0  # Griffin's gate sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: 2 branches, conv, gated LRU)
+# ---------------------------------------------------------------------------
+
+def rglru_init(cfg, key):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = iter(jax.random.split(key, 8))
+    lam = jax.random.uniform(next(ks), (w,), jnp.float32, 0.9, 0.999)
+    return {
+        "wx": dense_init(next(ks), (d, w)),
+        "wy": dense_init(next(ks), (d, w)),
+        "conv": dense_init(next(ks), (cfg.conv_width, w), 0.1),
+        "wa": dense_init(next(ks), (w, w)),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": dense_init(next(ks), (w, w)),
+        "bi": jnp.zeros((w,), jnp.float32),
+        # Λ parametrized so a = sigmoid(lambda_p) starts near 0.9..0.999
+        "lam": jnp.log(lam / (1 - lam)),
+        "wo": dense_init(next(ks), (w, d)),
+    }
+
+
+def rglru_state(cfg, batch, dtype):
+    return {"h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width),
+                              dtype)}
+
+
+def _causal_conv(x, w, tail):
+    """Depthwise causal conv.  x: (B,S,W), w: (K,W), tail: (B,K-1,W)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_tail = xp[:, -(K - 1):] if K > 1 else tail
+    return out, new_tail
+
+
+def rglru_apply(cfg, p, x, mode, *, state=None, pos=0):
+    B, S, d = x.shape
+    dt = x.dtype
+    if state is None:
+        state = rglru_state(cfg, B, dt)
+    bx = x @ p["wx"].astype(dt)
+    by = ACTS["gelu"](x @ p["wy"].astype(dt))
+    bx, conv_tail = _causal_conv(bx, p["conv"], state["conv"])
+
+    bxf = bx.astype(jnp.float32)
+    r = jax.nn.sigmoid(bxf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(bxf @ p["wi"] + p["bi"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r       # (B,S,W)
+    gated = i * bxf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated
+
+    if mode == "decode":
+        h = rg_lru_step(log_a[:, 0], b[:, 0], state["h"])
+        hs = h[:, None]
+        new_state = {"h": h.astype(jnp.float32), "conv": conv_tail}
+    else:
+        hs, h_last = rg_lru_scan(log_a, b, state["h"])
+        new_state = {"h": h_last.astype(jnp.float32), "conv": conv_tail}
+
+    y = (hs.astype(dt) * by) @ p["wo"].astype(dt)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): up-proj, conv, matrix-memory cell, gated down-proj
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg, key):
+    d = cfg.d_model
+    di = int(d * cfg.proj_factor)
+    H = cfg.rnn_heads
+    ks = iter(jax.random.split(key, 9))
+    return {
+        "up": dense_init(next(ks), (d, di)),
+        "gate": dense_init(next(ks), (d, di)),
+        "conv": dense_init(next(ks), (cfg.conv_width, di), 0.1),
+        "wq": dense_init(next(ks), (di, di)),
+        "wk": dense_init(next(ks), (di, di)),
+        "wv": dense_init(next(ks), (di, di)),
+        "wif": dense_init(next(ks), (di, 2 * H), 0.1),
+        "bif": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "down": dense_init(next(ks), (di, d)),
+    }
+
+
+def mlstm_state(cfg, batch, dtype):
+    di = int(cfg.d_model * cfg.proj_factor)
+    H = cfg.rnn_heads
+    hd = di // H
+    C, n, m = mlstm_init_state(batch, H, hd, hd)
+    return {"C": C, "n": n, "m": m,
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype)}
+
+
+def _heads(x, H):
+    B, S, di = x.shape
+    return x.reshape(B, S, H, di // H).transpose(0, 2, 1, 3)
+
+
+def mlstm_apply(cfg, p, x, mode, *, state=None, pos=0):
+    B, S, d = x.shape
+    dt = x.dtype
+    H = cfg.rnn_heads
+    if state is None:
+        state = mlstm_state(cfg, B, dt)
+    u = x @ p["up"].astype(dt)
+    z = x @ p["gate"].astype(dt)
+    c, conv_tail = _causal_conv(u, p["conv"], state["conv"])
+    c_act = ACTS["silu"](c)
+    q = _heads(c_act @ p["wq"].astype(dt), H)
+    k = _heads(c_act @ p["wk"].astype(dt), H)
+    v = _heads(u @ p["wv"].astype(dt), H)
+    gates = c_act.astype(jnp.float32) @ p["wif"] + p["bif"]  # (B,S,2H)
+    log_i = gates[..., :H].transpose(0, 2, 1)                # (B,H,S)
+    log_f = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    st = (state["C"], state["n"], state["m"])
+    if mode == "decode":
+        h, st = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                           log_i[:, :, 0], log_f[:, :, 0], st)
+        h = h[:, :, None]
+    else:
+        h, st = mlstm_scan(q, k, v, log_i, log_f, st)
+    hm = h.transpose(0, 2, 1, 3).reshape(B, S, -1)           # merge heads
+    y = (hm.astype(dt) * ACTS["silu"](z)) @ p["down"].astype(dt)
+    new_state = {"C": st[0], "n": st[1], "m": st[2], "conv": conv_tail}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, exp gating, block-diag recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg, key):
+    d = cfg.d_model
+    H = cfg.rnn_heads
+    hd = d // H
+    ks = iter(jax.random.split(key, 12))
+    p = {f"w{g}": dense_init(next(ks), (d, d)) for g in "ifzo"}
+    p.update({f"r{g}": dense_init(next(ks), (H, hd, hd)) for g in "ifzo"})
+    p["b"] = jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))])
+    dff = int(d * 4 / 3)
+    p["ff_up"] = dense_init(next(ks), (d, dff))
+    p["ff_gate"] = dense_init(next(ks), (d, dff))
+    p["ff_down"] = dense_init(next(ks), (dff, d))
+    return p
+
+
+def slstm_state(cfg, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def _slstm_cell(cfg, p, xt, st):
+    """One step.  xt: (B,d) f32 pre-projections applied outside."""
+    H = cfg.rnn_heads
+    d = cfg.d_model
+    hd = d // H
+    h = st["h"].reshape(-1, H, hd)
+    rec = {g: jnp.einsum("bhk,hkj->bhj", h, p[f"r{g}"]).reshape(-1, d)
+           for g in "ifzo"}
+    xi, xf, xz, xo = jnp.split(xt + jnp.concatenate(
+        [rec["i"], rec["f"], rec["z"], rec["o"]], axis=-1) + p["b"], 4, -1)
+    log_i = xi
+    log_f = jax.nn.log_sigmoid(xf)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i = jnp.exp(log_i - m_new)
+    f = jnp.exp(log_f + st["m"] - m_new)
+    z = jnp.tanh(xz)
+    o = jax.nn.sigmoid(xo)
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_apply(cfg, p, x, mode, *, state=None, pos=0):
+    B, S, d = x.shape
+    dt = x.dtype
+    if state is None:
+        state = slstm_state(cfg, B, dt)
+    xg = jnp.concatenate([x @ p[f"w{g}"].astype(dt) for g in "ifzo"],
+                         axis=-1).astype(jnp.float32)       # (B,S,4d)
+
+    if mode == "decode":
+        st = _slstm_cell(cfg, p, xg[:, 0], state)
+        hs = st["h"][:, None]
+        new_state = st
+    else:
+        def step(st, xt):
+            st = _slstm_cell(cfg, p, xt, st)
+            return st, st["h"]
+        new_state, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)
+
+    hs = hs.astype(dt)
+    ff = (ACTS["silu"](hs @ p["ff_gate"].astype(dt)) *
+          (hs @ p["ff_up"].astype(dt))) @ p["ff_down"].astype(dt)
+    return ff, new_state

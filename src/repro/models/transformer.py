@@ -1,0 +1,493 @@
+"""Composable decoder stack covering all 10 assigned architectures.
+
+Layers are grouped into maximal runs of a repeating *unit* (the config's
+``pattern``) and executed with ``jax.lax.scan`` over stacked unit params —
+this keeps the HLO size independent of depth (46-layer gemma2 compiles as
+one unit body), which is what makes the 512-device dry-run tractable.
+
+Pure functional API:
+  init_params(cfg, key)                     -> params pytree
+  apply(cfg, params, tokens, ...)           -> (logits, new_cache, aux)
+  init_cache(cfg, batch, max_len, dtype)    -> cache pytree
+  param_pspecs(cfg, params, mesh_axes)      -> matching PartitionSpec tree
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import attention, moe, recurrent
+from .layers import dense_init, mlp, mlp_params, rms_norm, softcap, \
+    sinusoidal_positions
+
+ATTN_KINDS = ("attn", "local", "mla", "cross")
+RNN_KINDS = ("mlstm", "slstm", "rglru")
+
+
+# ---------------------------------------------------------------------------
+# layer grouping
+# ---------------------------------------------------------------------------
+
+def layer_sigs(cfg) -> list[tuple[str, str]]:
+    return [(k, cfg.ffn_kind(i)) for i, k in enumerate(cfg.layer_kinds())]
+
+
+def layer_groups(cfg) -> list[tuple[list[tuple[str, str]], int]]:
+    """[(unit_signature, n_repeats)] covering all layers in order."""
+    sigs = layer_sigs(cfg)
+    n = len(sigs)
+    u = max(len(cfg.pattern), 1)
+    groups = []
+    i = 0
+    while i < n:
+        for ulen in (u, 1):
+            unit = sigs[i:i + ulen]
+            if len(unit) < ulen:
+                continue
+            reps = 1
+            while sigs[i + reps * ulen: i + (reps + 1) * ulen] == unit:
+                reps += 1
+            if reps > 1 or ulen == 1:
+                groups.append((unit, reps))
+                i += ulen * reps
+                break
+        else:  # pragma: no cover
+            groups.append((sigs[i:i + 1], 1))
+            i += 1
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg, key, sig, moe_pad):
+    kind, ffn = sig
+    ks = iter(jax.random.split(key, 8))
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.post_norm:
+        p["norm1_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if kind in ATTN_KINDS:
+        p["attn"] = attention.init(cfg, next(ks), kind)
+    elif kind == "mlstm":
+        p["rnn"] = recurrent.mlstm_init(cfg, next(ks))
+    elif kind == "slstm":
+        p["rnn"] = recurrent.slstm_init(cfg, next(ks))
+    elif kind == "rglru":
+        p["rnn"] = recurrent.rglru_init(cfg, next(ks))
+    else:
+        raise ValueError(kind)
+    if cfg.cross_kind == "decoder":
+        p["xnorm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["xattn"] = attention.init(cfg, next(ks), "cross")
+    if ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.post_norm:
+            p["norm2_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if ffn == "mlp":
+        dff = cfg.dense_d_ff if (cfg.n_experts and cfg.dense_d_ff) else cfg.d_ff
+        p["mlp"] = mlp_params(next(ks), cfg.d_model, dff, gated=cfg.gated_mlp)
+    elif ffn == "moe":
+        p["moe"] = moe.init(cfg, next(ks), pad_to=moe_pad)
+    return p
+
+
+def _layer_cache(cfg, sig, batch, max_len, dtype):
+    kind, _ = sig
+    c: dict[str, Any] = {}
+    if kind in ATTN_KINDS:
+        c["attn"] = attention.init_cache(cfg, kind, batch, max_len, dtype)
+    elif kind == "mlstm":
+        c["rnn"] = recurrent.mlstm_state(cfg, batch, dtype)
+    elif kind == "slstm":
+        c["rnn"] = recurrent.slstm_state(cfg, batch, dtype)
+    elif kind == "rglru":
+        c["rnn"] = recurrent.rglru_state(cfg, batch, dtype)
+    if cfg.cross_kind == "decoder":
+        c["xattn"] = attention.init_cache(cfg, "cross", batch, max_len, dtype)
+    return c
+
+
+def _layer_apply(cfg, sig, p, x, mode, *, pos, cache, enc, constrain=None):
+    kind, ffn = sig
+    rs = cfg.residual_scale
+    cst = constrain or (lambda v: v)
+    new_cache: dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        h, nc = attention.apply(cfg, p["attn"], h, kind, mode, pos=pos,
+                                cache=None if cache is None else cache.get("attn"),
+                                enc=enc if kind == "cross" else None)
+        if nc is not None:
+            new_cache["attn"] = nc
+    else:
+        fn = {"mlstm": recurrent.mlstm_apply, "slstm": recurrent.slstm_apply,
+              "rglru": recurrent.rglru_apply}[kind]
+        h, nc = fn(cfg, p["rnn"], h, mode,
+                   state=None if cache is None else cache.get("rnn"), pos=pos)
+        if nc is not None:
+            new_cache["rnn"] = nc
+    if cfg.post_norm:
+        h = rms_norm(h, p["norm1_post"], cfg.norm_eps)
+    # constrain at every residual junction: turns the TP psum into a
+    # reduce-scatter onto the sequence-sharded residual (Megatron SP)
+    x = cst(x + rs * h)
+
+    if cfg.cross_kind == "decoder":
+        h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+        h, ncx = attention.apply(cfg, p["xattn"], h, "cross", mode, pos=pos,
+                                 cache=None if cache is None else cache.get("xattn"),
+                                 enc=enc)
+        if ncx is not None:
+            new_cache["xattn"] = ncx
+        x = cst(x + rs * h)
+
+    if ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ffn == "mlp":
+            h = mlp(p["mlp"], h, cfg.act)
+        else:
+            h, moe_aux = moe.apply(cfg, p["moe"], h)
+            aux = aux + moe_aux["lb_loss"]
+        if cfg.post_norm:
+            h = rms_norm(h, p["norm2_post"], cfg.norm_eps)
+        x = cst(x + rs * h)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whisper-style bidirectional encoder
+# ---------------------------------------------------------------------------
+
+def _encoder_init(cfg, key):
+    ks = jax.random.split(key, cfg.encoder_layers + 1)
+    layers = []
+    for i in range(cfg.encoder_layers):
+        kk = iter(jax.random.split(ks[i], 3))
+        layers.append({
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": attention.init(cfg, next(kk), "attn"),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": mlp_params(next(kk), cfg.d_model, cfg.d_ff, gated=False),
+        })
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"layers": stack,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def _encoder_apply(cfg, p, frames):
+    """frames: (B, T, d) precomputed frontend embeddings (stub)."""
+    from ..kernels.flash_attention import chunked_attention
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        B, S, d = h.shape
+        H = cfg.n_heads
+        dt = h.dtype
+        q = attention._split_heads(h @ lp["attn"]["wq"].astype(dt), H)
+        k = attention._split_heads(h @ lp["attn"]["wk"].astype(dt),
+                                   cfg.n_kv_heads)
+        v = attention._split_heads(h @ lp["attn"]["wv"].astype(dt),
+                                   cfg.n_kv_heads)
+        o = chunked_attention(q, k, v, causal=False)
+        x = x + attention._merge_heads(o) @ lp["attn"]["wo"].astype(dt)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, "gelu")
+        return x, None
+
+    # unroll: the encoder is shallow and HloCostAnalysis counts while
+    # bodies once — unrolling keeps the dry-run FLOP numbers truthful.
+    x, _ = jax.lax.scan(body, x, p["layers"], unroll=cfg.encoder_layers)
+    return rms_norm(x, p["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, expert_pad: int = 1):
+    """``expert_pad``: pad the expert count to a multiple of the TP axis
+    size so the (E, d, f) stacks shard (launch passes the mesh's model
+    size; dummy experts are masked in the router)."""
+    groups = layer_groups(cfg)
+    ks = jax.random.split(key, len(groups) + 3)
+    params: dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), 0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab))
+    if cfg.encoder_layers:
+        params["encoder"] = _encoder_init(cfg, ks[2])
+    gp = []
+    mpad = expert_pad if cfg.n_experts else 1
+    for gi, (unit, reps) in enumerate(groups):
+        rep_keys = jax.random.split(ks[3 + gi], reps)
+        units = []
+        for r in range(reps):
+            lk = jax.random.split(rep_keys[r], len(unit))
+            units.append({f"l{j}": _layer_init(cfg, lk[j], sig, mpad)
+                          for j, sig in enumerate(unit)})
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *units) \
+            if reps > 1 else units[0]
+        gp.append(stacked)
+    params["groups"] = gp
+    return params
+
+
+def init_cache(cfg, batch, max_len, dtype):
+    caches = []
+    for unit, reps in layer_groups(cfg):
+        one = {f"l{j}": _layer_cache(cfg, sig, batch, max_len, dtype)
+               for j, sig in enumerate(unit)}
+        if reps > 1:
+            one = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one)
+        caches.append(one)
+    return caches
+
+
+def apply(cfg, params, tokens, *, enc=None, mode="train", pos=0,
+          cache=None, remat=False, act_sharding=None, logits_window=None):
+    """tokens: (B, S) int32.  Returns (logits, new_cache, aux).
+
+    ``act_sharding``: optional NamedSharding constraint applied to the
+    residual stream at every unit boundary — with the sequence dim on the
+    TP axis this is Megatron-style sequence parallelism, and (because the
+    scan carry is what remat stashes) it divides the activation-
+    checkpoint footprint by the TP degree.
+    ``logits_window``: compute logits only for the last N positions
+    (prefill needs just the final token — skips the (B,S,V) tensor).
+    """
+    dt = cfg.cdtype
+    constrain = (lambda v: jax.lax.with_sharding_constraint(v, act_sharding)) \
+        if act_sharding is not None else (lambda v: v)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    x = constrain(x)
+    if cfg.encoder_layers and enc is not None:
+        enc = _encoder_apply(cfg, params["encoder"], enc.astype(dt))
+    elif enc is not None:
+        enc = enc.astype(dt)
+
+    groups = layer_groups(cfg)
+    new_cache = [] if cache is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for gi, (unit, reps) in enumerate(groups):
+        gp = params["groups"][gi]
+        gc = cache[gi] if cache is not None else None
+
+        def unit_apply(x, up, uc):
+            return unit_forward(cfg, unit, up, x, uc, enc=enc, mode=mode,
+                                pos=pos, constrain=constrain)
+
+        if reps == 1:
+            x, ncs, aux = unit_apply(x, gp, gc)
+            aux_total = aux_total + aux
+            if new_cache is not None:
+                new_cache.append(ncs)
+        else:
+            def body(carry, xs):
+                x, aux_acc = carry
+                up, uc = xs
+                x, ncs, aux = unit_apply(x, up, uc)
+                return (x, aux_acc + aux), ncs
+
+            body_fn = jax.checkpoint(body) if (remat and mode == "train") \
+                else body
+            uc_stack = gc if gc is not None else _none_stack(gp)
+            (x, aux_total), ncs = jax.lax.scan(
+                body_fn, (x, aux_total), (gp, uc_stack))
+            if new_cache is not None:
+                new_cache.append(ncs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_window is not None:
+        x = x[:, -logits_window:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dt)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_cache, aux_total
+
+
+def _none_stack(gp):
+    """Scan xs placeholder when there is no cache (train mode)."""
+    reps = jax.tree.leaves(gp)[0].shape[0]
+    return jnp.zeros((reps,), jnp.float32)
+
+
+def unit_forward(cfg, unit, up, x, uc=None, *, enc=None, mode="train",
+                 pos=0, constrain=None):
+    """Apply one pattern unit (the scan body).  Public so the dry-run
+    costing can compile a unit standalone and correct for XLA's
+    count-while-body-once FLOP accounting."""
+    constrain = constrain or (lambda v: v)
+    uc = uc if isinstance(uc, dict) else None
+    ncs, aux = {}, jnp.zeros((), jnp.float32)
+    for j, sig in enumerate(unit):
+        x, nc, a = _layer_apply(
+            cfg, sig, up[f"l{j}"], x, mode, pos=pos,
+            cache=None if uc is None else uc[f"l{j}"], enc=enc,
+            constrain=constrain)
+        ncs[f"l{j}"] = nc
+        aux = aux + a
+    return constrain(x), ncs, aux
+
+
+# ---------------------------------------------------------------------------
+# parameter/cache partition specs (FSDP over data(+pod), TP over model)
+# ---------------------------------------------------------------------------
+
+def _divides(n, axes, mesh_shape):
+    size = int(np.prod([mesh_shape[a] for a in axes]))
+    return n % size == 0
+
+
+def _matrix_spec(shape, mesh_shape, tp, fsdp):
+    """Shard one dim over TP (prefer last), another over FSDP."""
+    nd = len(shape)
+    spec = [None] * nd
+    tp_dim = None
+    if tp is not None:
+        for d in reversed(range(nd)):
+            if _divides(shape[d], (tp,), mesh_shape) and shape[d] >= 8:
+                tp_dim = d
+                spec[d] = tp
+                break
+    for d in reversed(range(nd)):
+        if d != tp_dim and fsdp and _divides(shape[d], fsdp, mesh_shape) \
+                and shape[d] >= 8:
+            spec[d] = fsdp if len(fsdp) > 1 else fsdp[0]
+            break
+    return P(*spec)
+
+
+def param_pspecs(cfg, params, mesh_shape, *, tp="model", fsdp=("data",)):
+    """PartitionSpec pytree matching ``params`` (works on SDS trees too)."""
+    fsdp = tuple(a for a in fsdp if a in mesh_shape)
+    tp_ok = tp in mesh_shape
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P()
+        names = [str(getattr(k, "key", getattr(k, "name", "")))
+                 for k in path]
+        # strip any leading stacked-unit dim awareness: specs are by shape.
+        if "experts" in names:  # (E, din, dout): EP over model, FSDP inside
+            if tp_ok and _divides(shape[-3], (tp,), mesh_shape):
+                spec = [None] * len(shape)
+                spec[-3] = tp
+                if _divides(shape[-2], fsdp, mesh_shape):
+                    spec[-2] = fsdp if len(fsdp) > 1 else fsdp[0]
+                return P(*spec)
+        if names and names[-1] in ("embed", "lm_head"):
+            # vocab over TP only (sharded logits).  Deliberately NOT
+            # FSDP-sharding d_model: a gather from a (vocab@tp, d@fsdp)
+            # table forces GSPMD to materialize a batch-UNsharded
+            # (B_global, S, d/fsdp) intermediate before resharding.
+            vdim = 0 if names[-1] == "embed" else 1
+            spec = [None, None]
+            if tp_ok and _divides(shape[vdim], (tp,), mesh_shape):
+                spec[vdim] = tp
+            elif _divides(shape[vdim], fsdp, mesh_shape):
+                spec[vdim] = fsdp if len(fsdp) > 1 else fsdp[0]
+            return P(*spec)
+        if names and names[-1] in ("wo", "down", "ff_down", "wuv", "wuk"):
+            # reduction-side matrices: TP on the contracted (first) dim
+            spec = [None] * len(shape)
+            if tp_ok and _divides(shape[-2], (tp,), mesh_shape) \
+                    and shape[-2] >= 8:
+                spec[-2] = tp
+            if _divides(shape[-1], fsdp, mesh_shape) and shape[-1] >= 8:
+                spec[-1] = fsdp if len(fsdp) > 1 else fsdp[0]
+            return P(*spec)
+        sp = _matrix_spec(shape[-2:], mesh_shape, tp if tp_ok else None, fsdp)
+        return P(*([None] * (len(shape) - 2)), *sp)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_pspecs(cfg, cache, mesh_shape, *, tp="model", batch=("data",),
+                 kv_shard="seq"):
+    """KV caches: batch over data axes; TP axis placement per ``kv_shard``:
+
+      "seq"    shard the time dim (flash-decode style: scores/softmax
+               decompose into per-shard partials + tiny psums — avoids
+               the cache replication GSPMD falls back to when q is
+               head-sharded but the cache is head_dim-sharded),
+      "heads"  shard kv heads (falls back to trailing dims when heads
+               don't divide the axis).
+
+    Built structurally group-by-group so the leading `reps` dim of
+    scanned groups is never mistaken for batch."""
+    batch = tuple(a for a in batch if a in mesh_shape)
+    bspec = batch if len(batch) > 1 else (batch[0] if batch else None)
+    tp_ok = tp in mesh_shape
+
+    def leaf_spec(leaf, reps, name):
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        b_dim = 1 if reps > 1 else 0
+        if nd <= b_dim:
+            return P(*spec)
+        if bspec is not None and _divides(shape[b_dim], batch, mesh_shape):
+            spec[b_dim] = bspec
+        if tp_ok:
+            # time dim: attn k/v are (B,Hkv,T,hd) -> dim 2 (+reps);
+            # MLA latents (B,T,r) -> dim 1 (+reps)
+            t_dim = None
+            if kv_shard == "seq":
+                if name in ("k", "v") and nd - b_dim == 4:
+                    t_dim = b_dim + 2
+                elif name in ("ckv", "kr") and nd - b_dim == 3:
+                    t_dim = b_dim + 1
+            if t_dim is not None and \
+                    _divides(shape[t_dim], (tp,), mesh_shape):
+                spec[t_dim] = tp
+                return P(*spec)
+            for d in reversed(range(b_dim + 1, nd)):
+                if _divides(shape[d], (tp,), mesh_shape) and shape[d] >= 8:
+                    spec[d] = tp
+                    break
+        return P(*spec)
+
+    out = []
+    for (unit, reps), gc in zip(layer_groups(cfg), cache):
+        out.append(jax.tree_util.tree_map_with_path(
+            lambda p, x: leaf_spec(
+                x, reps, str(getattr(p[-1], "key",
+                                     getattr(p[-1], "name", "")))), gc))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# counts
+# ---------------------------------------------------------------------------
+
+def param_count(cfg, active_only=False) -> int:
+    tree = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        n = int(np.prod(leaf.shape))
+        names = [str(getattr(k, "key", getattr(k, "name", "")))
+                 for k in path]
+        if active_only and "experts" in names:
+            # routed experts: only top_k of n_experts are touched per token
+            n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+        total += n
+    return total

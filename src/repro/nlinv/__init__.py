@@ -1,0 +1,3 @@
+from . import cg, gridding, irgnm, operators, phantom, recon
+
+__all__ = ["cg", "gridding", "irgnm", "operators", "phantom", "recon"]

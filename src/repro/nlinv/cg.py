@@ -1,0 +1,39 @@
+"""Conjugate gradient on the (rho, chat) pytree (inner solver of eq. 3).
+
+lax.while_loop with max-iteration + relative-residual stopping; all
+scalar products go through ``dot`` so the distributed path can psum them
+(the paper's 'scalar products of all data' CG entry in Table 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .operators import uaxpy, udot
+
+
+def cg(A, rhs, x0, *, iters: int = 30, tol: float = 1e-6, dot=udot):
+    """Solve A x = rhs, A SPD (normal operator + alpha I)."""
+    r0 = uaxpy(-1.0, A(x0), rhs)
+    p0 = r0
+    rs0 = jnp.real(dot(r0, r0))
+    thresh = tol * tol * rs0
+
+    def cond(state):
+        i, x, r, p, rs = state
+        return jnp.logical_and(i < iters, rs > thresh)
+
+    def body(state):
+        i, x, r, p, rs = state
+        Ap = A(p)
+        alpha = rs / jnp.maximum(jnp.real(dot(p, Ap)), 1e-30)
+        x = uaxpy(alpha, p, x)
+        r = uaxpy(-alpha, Ap, r)
+        rs_new = jnp.real(dot(r, r))
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = uaxpy(beta, p, r)
+        return i + 1, x, r, p, rs_new
+
+    _, x, _, _, _ = jax.lax.while_loop(cond, body, (0, x0, r0, p0, rs0))
+    return x

@@ -1,0 +1,44 @@
+"""Iteratively Regularized Gauss-Newton Method (paper eq. 3).
+
+    (DG^H DG + alpha_n I)(x_{n+1} - x_n)
+        = DG^H (y - G(x_n)) - alpha_n (x_n - x_ref)
+
+with alpha_n = alpha0 * q^n and the previous frame as x_ref (temporal
+regularization — the reason movie frames cannot be pipelined, §3.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cg import cg
+from .operators import uaxpy, udot, uzeros
+
+
+def irgnm(ops, y, x0, x_ref=None, *, newton: int = 7, cg_iters: int = 30,
+          alpha0: float = 1.0, q: float = 1.0 / 3.0,
+          channel_sum=None, dot=udot):
+    """Returns the solution pytree u = {rho, chat}."""
+    x = x0
+    if x_ref is None:
+        x_ref = x0   # pull toward the initial guess (rho=1, chat=0);
+        # movies pass the (damped) previous frame instead — paper §3.2.
+    alpha = jnp.asarray(alpha0, jnp.float32)
+    for n in range(newton):
+        r = uaxpy(-1.0, ops.G(x), y)                       # y - G(x)
+        rhs = ops.DGH(x, r, channel_sum=channel_sum)
+        rhs = uaxpy(alpha, uaxpy(-1.0, x, x_ref), rhs)     # - a (x - ref)
+        A = lambda du: ops.normal(x, du, alpha, channel_sum=channel_sum)
+        dx = cg(A, rhs, jax.tree.map(jnp.zeros_like, x),
+                iters=cg_iters, dot=dot)
+        x = uaxpy(1.0, dx, x)
+        alpha = alpha * q
+    return x
+
+
+def postprocess(ops, u):
+    """rho * |c| normalization: the displayed image (RSS-weighted)."""
+    c = ops.coils(u["chat"])
+    rss = jnp.sqrt(jnp.sum(jnp.abs(c) ** 2, axis=0))
+    return u["rho"] * rss

@@ -1,0 +1,115 @@
+"""Reconstruction drivers: single-device, distributed (channel-split),
+and the real-time movie loop with temporal regularization.
+
+The distributed path is the paper's §3.2 decomposition: coil channels
+segmented across the device group (MGPU segmented container), the image
+rho CLONEd, and the channel sum in DG^H executed as a block-wise
+all-reduce.  ``channel_sum`` strategy:
+
+  full   psum of the whole doubled grid (paper-faithful baseline)
+  crop   M_Omega zeroes everything outside the centered FOV quarter, so
+         only that 2-D section is reduced (the paper's kern_all_red_p2p_2d
+         insight; 4x fewer bytes on the wire) and the result re-padded.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.runtime import DeviceGroup
+from .irgnm import irgnm, postprocess
+from .operators import make_ops, sobolev_weight, udot, uinit
+
+
+def _csum_full(axis):
+    return lambda prod: lax.psum(jnp.sum(prod, axis=0), axis)
+
+
+def _csum_crop(axis):
+    def cs(prod):
+        g = prod.shape[-1]
+        q = g // 4
+        local = jnp.sum(prod, axis=0)
+        crop = lax.psum(local[q:3 * q, q:3 * q], axis)
+        return jnp.zeros_like(local).at[q:3 * q, q:3 * q].set(crop)
+    return cs
+
+
+def _dist_dot(axis):
+    def dot(x, y):
+        local = jnp.vdot(x["chat"], y["chat"])
+        return jnp.vdot(x["rho"], y["rho"]) + lax.psum(local, axis)
+    return dot
+
+
+@functools.partial(jax.jit, static_argnames=("newton", "cg_iters"))
+def reconstruct_frame(y, mask, fov, weight, x0, x_ref, *,
+                      newton=7, cg_iters=30):
+    """Single-device NLINV for one frame.  y: (J, X, Y)."""
+    ops = make_ops(mask, fov, weight)
+    u = irgnm(ops, y, x0, x_ref, newton=newton, cg_iters=cg_iters)
+    return u, postprocess(ops, u)
+
+
+def make_dist_reconstruct(group: DeviceGroup, axis: str = "data", *,
+                          newton=7, cg_iters=30, channel_sum="crop"):
+    """shard_map'd NLINV: coils split over ``axis`` (paper §3.2)."""
+    mesh = group.mesh
+    cs = {"full": _csum_full, "crop": _csum_crop}[channel_sum](axis)
+    dot = _dist_dot(axis)
+
+    def frame(y, mask, fov, weight, x0, x_ref):
+        ops = make_ops(mask, fov, weight)
+        u = irgnm(ops, y, x0, x_ref, newton=newton, cg_iters=cg_iters,
+                  channel_sum=cs, dot=dot)
+        c = ops.coils(u["chat"])
+        rss = lax.psum(jnp.sum(jnp.abs(c) ** 2, axis=0), axis)
+        img = u["rho"] * jnp.sqrt(rss)
+        return u, img
+
+    uspec = {"rho": P(), "chat": P(axis)}
+    fn = jax.shard_map(
+        frame, mesh=mesh,
+        in_specs=(P(axis), P(), P(), P(), uspec, uspec),
+        out_specs=(uspec, P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def pad_channels(y, nseg):
+    """Zero-pad the coil dim to a multiple of the group size (zero
+    channels are exact no-ops for all NLINV sums)."""
+    J = y.shape[0]
+    Jp = -(-J // nseg) * nseg
+    if Jp == J:
+        return y
+    return np.concatenate(
+        [y, np.zeros((Jp - J,) + y.shape[1:], y.dtype)], axis=0)
+
+
+def reconstruct_movie(data, *, newton=7, cg_iters=30, damping=0.9,
+                      frame_fn=None):
+    """Sequential movie loop (frames depend on x_ref: no pipelining,
+    paper §3.2).  Returns (F, X, Y) images."""
+    y, masks, fov = data["y"], data["masks"], data["fov"]
+    F, J, g, _ = y.shape
+    weight = sobolev_weight(g)
+    u = uinit(J, g)
+    x_ref = u
+    images = []
+    for f in range(F):
+        if frame_fn is None:
+            u, img = reconstruct_frame(
+                jnp.asarray(y[f]), jnp.asarray(masks[f]), jnp.asarray(fov),
+                jnp.asarray(weight), u, x_ref,
+                newton=newton, cg_iters=cg_iters)
+        else:
+            u, img = frame_fn(y[f], masks[f], fov, weight, u, x_ref)
+        x_ref = jax.tree.map(lambda a: damping * a, u)
+        images.append(img)
+    return jnp.stack(images)

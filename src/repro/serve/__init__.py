@@ -1,0 +1,3 @@
+from .engine import Engine, Request, make_serve_steps
+
+__all__ = ["Engine", "Request", "make_serve_steps"]

@@ -1,0 +1,135 @@
+"""Serving engine: prefill/decode step functions + a slot-based
+continuous-batching driver (the LM analogue of the paper's real-time
+reconstruction server: fixed problem size, bounded latency per step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import frontends, transformer
+
+
+def make_serve_steps(cfg, mesh=None, *, max_len=2048, batch=8,
+                     tp="model", batch_axes=("data",)):
+    """Returns (prefill_fn, decode_fn, init_cache_fn), jit'd (+sharded
+    when a mesh is given)."""
+
+    def prefill(params, tokens, cache, enc=None, pos=0):
+        logits, cache, _ = transformer.apply(
+            cfg, params, tokens, enc=enc, mode="prefill", pos=pos,
+            cache=cache, logits_window=1)
+        return logits[:, -1], cache
+
+    def decode(params, tokens, cache, pos):
+        logits, cache, _ = transformer.apply(
+            cfg, params, tokens, enc=None, mode="decode", pos=pos,
+            cache=cache)
+        return logits[:, -1], cache
+
+    def init_cache():
+        return transformer.init_cache(cfg, batch, max_len, cfg.cdtype)
+
+    if mesh is None:
+        return jax.jit(prefill), jax.jit(decode), init_cache
+
+    cache_shape = jax.eval_shape(init_cache)
+    cspec = transformer.cache_pspecs(cfg, cache_shape, dict(mesh.shape),
+                                     tp=tp, batch=batch_axes)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
+                            is_leaf=lambda x: isinstance(x, P))
+    pspecs = transformer.param_pspecs(cfg, jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))),
+        dict(mesh.shape), tp=tp, fsdp=batch_axes)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    rep = NamedSharding(mesh, P())
+
+    prefill_j = jax.jit(prefill, in_shardings=(param_sh, tok_sh, cache_sh),
+                        out_shardings=(None, cache_sh),
+                        static_argnames=("pos",))
+    decode_j = jax.jit(decode, in_shardings=(param_sh, tok_sh, cache_sh, rep),
+                       out_shardings=(None, cache_sh),
+                       donate_argnums=(2,))
+    return prefill_j, decode_j, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Greedy continuous-batching server over ``batch`` slots.
+
+    Simplification vs production: slots decode in lockstep at a shared
+    position (per-slot kv_len masking handles ragged prompts by left-
+    aligning each new request at position 0 of its own slot-batch run);
+    one prefill per admission.  Deterministic: greedy argmax.
+    """
+
+    def __init__(self, cfg, params, *, batch=4, max_len=512):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        pf, dec, init_cache = make_serve_steps(cfg, None, max_len=max_len,
+                                               batch=1)
+        self._prefill, self._decode = pf, dec
+        self._mk_cache = lambda: transformer.init_cache(cfg, 1, max_len,
+                                                        cfg.cdtype)
+        self.queue: list[Request] = []
+        self.active: dict[int, dict[str, Any]] = {}
+
+    def submit(self, prompt, max_new=32) -> int:
+        rid = len(self.queue)
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.batch:
+            req = self.queue.pop(0)
+            enc = frontends.synthetic_frontend(self.cfg, 1)
+            cache = self._mk_cache()
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            logits, cache = self._prefill(self.params, toks, cache, enc=enc)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out.append(nxt)
+            self.active[req.rid] = {"req": req, "cache": cache,
+                                    "pos": len(req.prompt)}
+
+    def step(self):
+        """One decode step for every active request."""
+        self._admit()
+        finished = []
+        for rid, st in list(self.active.items()):
+            req = st["req"]
+            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
+            logits, st["cache"] = self._decode(self.params, tok,
+                                               st["cache"], st["pos"])
+            st["pos"] += 1
+            req.out.append(int(jnp.argmax(logits[0])))
+            if len(req.out) >= req.max_new or st["pos"] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                del self.active[rid]
+        return finished
+
+    def run(self):
+        done = []
+        while self.queue or self.active:
+            done.extend(self.step())
+        return done

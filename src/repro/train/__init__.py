@@ -1,0 +1,8 @@
+from . import grad_compress, optimizer, trainer
+from .optimizer import adamw_init, adamw_update, warmup_cosine
+from .trainer import lm_loss, make_train_state, make_train_step, \
+    state_shardings
+
+__all__ = ["grad_compress", "optimizer", "trainer", "adamw_init",
+           "adamw_update", "warmup_cosine", "lm_loss", "make_train_state",
+           "make_train_step", "state_shardings"]

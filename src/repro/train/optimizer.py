@@ -1,0 +1,68 @@
+"""AdamW + schedules, pure JAX (no external deps).
+
+State layout mirrors params (ZeRO-3: m/v inherit the param sharding)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def warmup_cosine(base_lr, warmup, total, min_frac=0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(np.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip=1.0):
+    if clip:
+        grads, gnorm = clip_by_global_norm(grads, clip)
+    else:
+        gnorm = jnp.zeros(())
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay and p.ndim >= 2:      # no decay on norms/biases
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

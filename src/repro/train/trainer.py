@@ -1,0 +1,102 @@
+"""Training step builder: loss, remat, microbatch accumulation, pjit
+shardings (FSDP over data/pod + TP over model), metrics.
+
+``make_train_step`` returns (step_fn, state_shardings); step_fn is
+jit-compiled with explicit in/out shardings — this is the function the
+multi-pod dry-run lowers for every architecture.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer
+from .optimizer import adamw_init, adamw_update, warmup_cosine
+
+
+def lm_loss(cfg, params, tokens, labels, enc=None, *, remat=True,
+            aux_weight=0.01, act_sharding=None):
+    logits, _, aux = transformer.apply(cfg, params, tokens, enc=enc,
+                                       mode="train", remat=remat,
+                                       act_sharding=act_sharding)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
+    loss = jnp.mean(nll)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+def make_train_state(cfg, key, *, expert_pad=1):
+    params = transformer.init_params(cfg, key, expert_pad=expert_pad)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def state_shardings(cfg, state, mesh, *, fsdp=("data",), tp="model"):
+    pspecs = transformer.param_pspecs(cfg, state["params"], dict(mesh.shape),
+                                      tp=tp, fsdp=fsdp)
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"params": to_sh(pspecs),
+            "opt": {"m": to_sh(pspecs), "v": to_sh(pspecs),
+                    "step": NamedSharding(mesh, P())}}
+
+
+def make_train_step(cfg, mesh, *, base_lr=3e-4, warmup=100, total=10000,
+                    microbatches=1, remat=True, fsdp=("data",), tp="model",
+                    batch_axes=("data",), donate=True, act_sharding=None):
+    lr_fn = warmup_cosine(base_lr, warmup, total)
+    batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def step(state, tokens, labels, enc=None):
+        def grads_of(tok, lab):
+            (loss, met), g = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, tok, lab, enc, remat=remat,
+                                  act_sharding=act_sharding),
+                has_aux=True)(state["params"])
+            return loss, met, g
+
+        if microbatches > 1:
+            B = tokens.shape[0]
+            mb = B // microbatches
+            tok_mb = tokens.reshape(microbatches, mb, -1)
+            lab_mb = labels.reshape(microbatches, mb, -1)
+
+            def acc_fn(carry, xs):
+                gsum, lsum = carry
+                loss, _, g = grads_of(xs[0], xs[1])
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zero_g, 0.0),
+                                           (tok_mb, lab_mb))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            met = {"nll": loss, "aux": jnp.zeros(())}
+        else:
+            loss, met, grads = grads_of(tokens, labels)
+
+        lr = lr_fn(state["opt"]["step"])
+        params, opt, gnorm = adamw_update(state["params"], grads,
+                                          state["opt"], lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr, **met}
+        return {"params": params, "opt": opt}, metrics
+
+    def build(state_sh):
+        data_sh = NamedSharding(mesh, P(bspec, None))
+        enc_sh = NamedSharding(mesh, P(bspec, None, None))
+        return jax.jit(
+            step,
+            in_shardings=(state_sh, data_sh, data_sh, enc_sh),
+            out_shardings=(state_sh, NamedSharding(mesh, P())),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    return step, build

@@ -1,0 +1,37 @@
+"""Test helpers.
+
+Multi-device semantics need >1 device, but XLA locks the host device
+count at first jax init — and smoke tests/benches must see 1 device.  So
+multi-device tests run their payload in a subprocess with
+``--xla_force_host_platform_device_count=N`` (never set globally).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+PREAMBLE = """
+import os, sys
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+np.random.seed(0)
+def check(name, ok):
+    if not ok:
+        print("FAIL:", name); sys.exit(1)
+    print("ok:", name)
+"""
+
+
+def run_with_devices(code: str, ndev: int = 8, timeout: int = 600) -> str:
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", PREAMBLE + code], env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=str(REPO))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests on reduced configs (assignment item f).
+
+For every assigned arch: one forward/train step on CPU asserting output
+shapes + no NaNs, plus the strongest cheap correctness check we have —
+prefill+decode must reproduce the full-forward logits position by
+position (exercises caches, rolling windows, recurrent states, MLA
+latents and cross-attention end to end).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import frontends, transformer
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, compute_dtype="float32")
+
+
+def _inputs(cfg, B, S, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    enc = frontends.synthetic_frontend(cfg, B, ks[1])
+    return tokens, enc
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _f32(get_smoke(arch))
+    B, S = 2, 16
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, enc = _inputs(cfg, B, S)
+    logits, _, aux = transformer.apply(cfg, params, tokens, enc=enc,
+                                       mode="train")
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_reduces_loss(arch):
+    cfg = _f32(get_smoke(arch))
+    B, S = 2, 16
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, enc = _inputs(cfg, B, S)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, _, aux = transformer.apply(cfg, p, tokens, enc=enc,
+                                           mode="train")
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    params2 = jax.tree.map(lambda p, gg: p - 0.5 / max(float(gnorm), 1.0) * gg,
+                           params, g)
+    l1 = loss_fn(params2)
+    assert float(l1) < float(l0), f"{arch}: loss did not decrease"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = _f32(get_smoke(arch))
+    if cfg.n_experts:
+        # top-k selection is discontinuous: with random (near-tied) routers,
+        # fp accumulation-order noise across seq lengths flips experts.
+        # Route to ALL experts here so the consistency check is exact while
+        # still exercising dispatch/combine + caches (see test_moe.py for
+        # dispatch correctness under real top-k).
+        cfg = dataclasses.replace(cfg, top_k=cfg.n_experts,
+                                  capacity_factor=1.0)
+    B, S, pre = 1, 12, 6
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    tokens, enc = _inputs(cfg, B, S, seed=1)
+
+    full_logits, _, _ = transformer.apply(cfg, params, tokens, enc=enc,
+                                          mode="train")
+
+    cache = transformer.init_cache(cfg, B, S, cfg.cdtype)
+    pl, cache, _ = transformer.apply(cfg, params, tokens[:, :pre], enc=enc,
+                                     mode="prefill", pos=0, cache=cache)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(full_logits[:, :pre]),
+                               atol=2e-3, rtol=2e-3,
+                               err_msg=f"{arch}: prefill != forward")
+
+    for t in range(pre, S):
+        dl, cache, _ = transformer.apply(cfg, params, tokens[:, t:t + 1],
+                                         enc=None, mode="decode", pos=t,
+                                         cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(dl[:, 0]), np.asarray(full_logits[:, t]),
+            atol=5e-3, rtol=5e-3, err_msg=f"{arch}: decode@{t} != forward")
+
+
+def test_layer_grouping_covers_all_layers():
+    for arch in ARCH_IDS:
+        cfg = get_smoke(arch)
+        groups = transformer.layer_groups(cfg)
+        n = sum(len(u) * r for u, r in groups)
+        assert n == cfg.n_layers, (arch, groups)
+        full = get_smoke(arch)
+        assert len(full.layer_kinds()) == full.n_layers
+
+
+def test_param_counts_full_configs():
+    """Full configs land in the advertised parameter band."""
+    from repro.configs import get_config
+    expect = {
+        "xlstm-350m": (0.25e9, 0.60e9),
+        "minicpm3-4b": (3.0e9, 5.0e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "gemma2-27b": (24e9, 30e9),
+        "llama3.2-3b": (2.8e9, 4.0e9),
+        "recurrentgemma-2b": (2.0e9, 3.2e9),
+        "llama-3.2-vision-11b": (8.5e9, 12e9),
+        "granite-moe-3b-a800m": (2.0e9, 4.0e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "whisper-tiny": (25e6, 80e6),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = transformer.param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,40 @@
+"""Elastic re-shard: checkpoints written on one mesh restore onto any
+other mesh (the scale-up/scale-down path for node failures)."""
+
+import tempfile
+
+from helpers import run_with_devices
+
+ELASTIC = """
+import tempfile, pathlib
+from repro.ckpt import save, restore_sharded
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+tmp = tempfile.mkdtemp()
+# write from a 1-device view (host arrays)
+tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+        "opt": {"m": np.ones((16,), np.float32)}}
+save(tmp, 3, tree)
+
+# restore onto an 8-device mesh with 2D sharding (elastic scale-UP)
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh = {"w": NamedSharding(mesh, P("data", "model")),
+      "opt": {"m": NamedSharding(mesh, P("data"))}}
+like = {"w": jnp.zeros((8, 8), jnp.float32),
+        "opt": {"m": jnp.zeros((16,), jnp.float32)}}
+got, step = restore_sharded(tmp, like, sh)
+check("step", step == 3)
+check("values", np.allclose(np.asarray(got["w"]), tree["w"]))
+check("sharded", len(got["w"].addressable_shards) == 8)
+
+# scale-DOWN: re-save from the sharded tree, restore replicated
+save(tmp, 4, got)
+sh1 = jax.tree.map(lambda _: NamedSharding(mesh, P()), like)
+got2, step2 = restore_sharded(tmp, like, sh1)
+check("downshard", np.allclose(np.asarray(got2["w"]), tree["w"]))
+"""
+
+
+def test_elastic_reshard_8dev():
+    run_with_devices(ELASTIC, ndev=8)

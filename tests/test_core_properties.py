@@ -1,0 +1,56 @@
+"""Property tests (hypothesis) for the segmented-container invariants.
+
+Single-device mesh: the policies' math (padding, block-cyclic
+permutations, reduce semantics) must be invariant to the device count, so
+these run in-process on 1 device; true multi-shard layouts are covered by
+test_core_multidevice.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DeviceGroup, Policy, segment, gather, reduce,
+                        all_reduce, blas)
+
+G = DeviceGroup.all_devices((1,), ("data",))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 33), m=st.integers(1, 5),
+       policy=st.sampled_from([Policy.NATURAL, Policy.CLONE, Policy.BLOCK]),
+       block=st.integers(1, 4))
+def test_roundtrip(n, m, policy, block):
+    x = np.random.randn(n, m).astype(np.float32)
+    s = segment(x, G, policy=policy, block=block)
+    assert np.allclose(gather(s), x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 8), n=st.integers(1, 6))
+def test_reduce_matches_numpy(b, n):
+    x = np.random.randn(b, n, n).astype(np.float32)
+    s = segment(x, G)
+    assert np.allclose(reduce(s), x.sum(0), atol=1e-4)
+    assert np.allclose(gather(all_reduce(s, "max")), x.max(0), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 40), a=st.floats(-3, 3, allow_nan=False))
+def test_axpy_linearity(n, a):
+    x = np.random.randn(n).astype(np.float32)
+    y = np.random.randn(n).astype(np.float32)
+    sx, sy = segment(x, G), segment(y, G)
+    got = gather(blas.axpy(a, sx, sy))
+    assert np.allclose(got, a * x + y, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20))
+def test_dot_conjugate_symmetry(n):
+    x = (np.random.randn(n) + 1j * np.random.randn(n)).astype(np.complex64)
+    y = (np.random.randn(n) + 1j * np.random.randn(n)).astype(np.complex64)
+    sx, sy = segment(x, G), segment(y, G)
+    d1 = complex(blas.dot(sx, sy))
+    d2 = complex(blas.dot(sy, sx))
+    assert abs(d1 - np.conj(d2)) < 1e-3
