@@ -9,6 +9,7 @@ direct P2P (cross-IOH) — on TPU the analogue is leaving the ICI domain.
 Validated against the paper's claims: speedup ~1.7 @ 2 GPUs, ~2.1 @ 4.
 """
 
+import pathlib
 import time
 
 import jax
@@ -17,10 +18,14 @@ import numpy as np
 
 from repro.core.runtime import HW
 from repro.nlinv import phantom
-from repro.nlinv.recon import reconstruct_frame
+from repro.nlinv.recon import Reconstructor, reconstruct_frame
+from repro.nlinv.stream import FrameStream
 from repro.nlinv.operators import sobolev_weight, uinit
 
 from .common import PAPER_HW, allreduce_time, fmt_row
+
+LATENCY_ARTIFACT = pathlib.Path(__file__).parent / "out" / \
+    "nlinv_stream_latency.json"
 
 
 def speedup_model(grid: int, J: int, newton=7, cg_iters=6, hw="paper",
@@ -85,6 +90,19 @@ def rows(quick=False):
         der = (f"fps1={fps:.2f};paper_s2={sp[2]:.2f};paper_s3={sp[3]:.2f};"
                f"paper_s4={sp[4]:.2f};v5e_s4={sv[4]:.2f}")
         out.append(fmt_row(f"fig6_nlinv_g{g}_J{J}", dt * 1e6, der))
+    # streaming real-time engine: steady-state per-frame latency + jitter
+    # (frame f+1 upload overlapped with frame f compute, carry donated);
+    # the report artifact is the recon-service SLO evidence.
+    d = phantom.make_dataset(n=32, ncoils=4, nspokes=11,
+                             frames=2 if quick else 5)
+    rec = Reconstructor(newton=6, cg_iters=10, channel_sum="crop")
+    _, rep = FrameStream(rec, damping=0.9).run(
+        d["y"], d["masks"], d["fov"], report_path=LATENCY_ARTIFACT)
+    s = rep.summary()
+    out.append(fmt_row(
+        f"fig6_stream_g{d['grid']}_J4", s["mean_ms"] * 1e3,
+        f"fps={s['fps']:.2f};p95_ms={s['p95_ms']:.2f};"
+        f"jitter_ms={s['jitter_ms']:.2f};artifact={LATENCY_ARTIFACT.name}"))
     # paper-claims validation at the paper's own problem size
     # (grid 768 = 2x384, J=8; claims: ~1.7x @ 2 GPUs, ~2.1x @ 4)
     sp = speedup_model(768, 8)

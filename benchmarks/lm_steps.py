@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke
+from repro.core import compat
 from repro.models import frontends, transformer
 from repro.train import make_train_state, make_train_step
 
@@ -35,8 +36,7 @@ def rows(quick=False):
     archs = ARCH_IDS[:3] if quick else ARCH_IDS
     for arch in archs:
         cfg = dataclasses.replace(get_smoke(arch), compute_dtype="float32")
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((1,), ("data",))
         state = make_train_state(cfg, jax.random.PRNGKey(0))
         step_fn, _ = make_train_step(cfg, mesh, remat=False, donate=False)
         tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,

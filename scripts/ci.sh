@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification, twice: once on the host's single default device,
+# and once under 4 simulated host devices so every in-process code path
+# also runs with a real multi-device mesh ambient (the subprocess-based
+# multi-device tests manage their own device count either way).
+#
+#   scripts/ci.sh            # full tier-1, both device configurations
+#   scripts/ci.sh -k nlinv   # extra pytest args are forwarded
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: single device ==="
+python -m pytest -x -q "$@"
+
+echo "=== tier-1: 4 simulated host devices ==="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -x -q "$@"

@@ -5,20 +5,24 @@ segmented FFT/BLAS, adapted from single-node multi-GPU (PCIe/IOH) to
 multi-pod TPU (ICI/DCN).  See DESIGN.md §2 for the adaptation map.
 """
 
+from . import compat
 from .runtime import DeviceGroup, current_group, HW, DCN_AXES
 from .segmented import Policy, SegmentedArray, segment, gather, overlap2d_map
-from .comm import (broadcast, scatter, reduce, all_reduce, copy, all_to_all,
-                   reduce_scatter, hierarchical_psum)
-from .invoke import invoke_kernel, invoke_kernel_all, PassThrough, dev_rank
+from .comm import (broadcast, scatter, reduce, all_reduce, all_reduce_window,
+                   vdot, copy, all_to_all, reduce_scatter, hierarchical_psum)
+from .invoke import (invoke_kernel, invoke_kernel_all, make_spmd, PassThrough,
+                     dev_rank)
 from .sync import fence, barrier, barrier_fence, ordered
 from . import blas, fft
 
 __all__ = [
+    "compat",
     "DeviceGroup", "current_group", "HW", "DCN_AXES",
     "Policy", "SegmentedArray", "segment", "gather", "overlap2d_map",
-    "broadcast", "scatter", "reduce", "all_reduce", "copy", "all_to_all",
-    "reduce_scatter", "hierarchical_psum",
-    "invoke_kernel", "invoke_kernel_all", "PassThrough", "dev_rank",
+    "broadcast", "scatter", "reduce", "all_reduce", "all_reduce_window",
+    "vdot", "copy", "all_to_all", "reduce_scatter", "hierarchical_psum",
+    "invoke_kernel", "invoke_kernel_all", "make_spmd", "PassThrough",
+    "dev_rank",
     "fence", "barrier", "barrier_fence", "ordered",
     "blas", "fft",
 ]

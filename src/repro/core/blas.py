@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .runtime import DeviceGroup
 from .segmented import Policy, SegmentedArray
 from .comm import _axis_arg
@@ -34,9 +35,9 @@ def dot(x: SegmentedArray, y: SegmentedArray) -> jax.Array:
         part = jnp.vdot(xl, yl)
         return lax.psum(part, ax)
 
-    return jax.shard_map(body, mesh=x.group.mesh,
-                         in_specs=(x.pspec, y.pspec), out_specs=P())(
-                             x.data, y.data)
+    return compat.shard_map(body, mesh=x.group.mesh,
+                            in_specs=(x.pspec, y.pspec), out_specs=P())(
+                                x.data, y.data)
 
 
 def norm2(x: SegmentedArray) -> jax.Array:
@@ -58,7 +59,7 @@ def gemm_ksplit(a: SegmentedArray, b: SegmentedArray) -> SegmentedArray:
         return lax.psum(al @ bl, ax)
 
     # A split on dim 1 (k), B split on dim 0 (k)
-    out = jax.shard_map(body, mesh=a.group.mesh,
-                        in_specs=(P(None, ax), P(ax, None)),
-                        out_specs=P())(a.data, b.data)
+    out = compat.shard_map(body, mesh=a.group.mesh,
+                           in_specs=(P(None, ax), P(ax, None)),
+                           out_specs=P())(a.data, b.data)
     return SegmentedArray(out, a.group, Policy.CLONE, 0, a.mesh_axes)

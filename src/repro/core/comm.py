@@ -9,6 +9,15 @@ collectives, and the topology split becomes the ICI/DCN axis split:
 reduce-scatter(ICI) -> all-reduce(DCN) -> all-gather(ICI), which moves
 ``1/n_ici`` of the bytes over the slow inter-pod links — the TPU analogue
 of the paper's staged cross-IOH reduction.
+
+Dual calling forms
+------------------
+Every reduction verb works both **eagerly** on a ``SegmentedArray`` (the
+verb wraps its own ``shard_map``) and **inside a shard_map body** on the
+per-device shard (pass the reduction ``axis`` name; ``axis=None`` means
+single-program execution and degenerates to the local math).  This is
+what lets whole algorithms — NLINV's Newton/CG loop — be written once
+against the verbs and launched either way.
 """
 
 from __future__ import annotations
@@ -22,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .runtime import DeviceGroup, current_group
 from .segmented import Policy, SegmentedArray, gather, segment
 
@@ -56,29 +66,141 @@ def reduce(seg: SegmentedArray, op: str = "sum") -> jax.Array:
         return pcoll(x, _axis_arg(seg.mesh_axes))
 
     out_spec = P(*[None] * (seg.data.ndim - 1))
-    return jax.shard_map(body, mesh=seg.group.mesh,
-                         in_specs=seg.pspec, out_specs=out_spec)(seg.data)
+    return compat.shard_map(body, mesh=seg.group.mesh,
+                            in_specs=seg.pspec, out_specs=out_spec)(seg.data)
 
 
 def all_reduce(seg: SegmentedArray, op: str = "sum",
                hierarchical: bool = False) -> SegmentedArray:
     """Like ``reduce`` but the result is CLONEd on every device
     (the paper's Σ ρ_g block-wise all-reduce)."""
+    return all_reduce_window(seg, None, op=op, hierarchical=hierarchical)
+
+
+def _window_index(ndim: int, window, axes=None) -> tuple:
+    """Slice tuple selecting ``window`` ((lo, hi) pairs) on the trailing
+    dims of a rank-``ndim`` array (or on explicit ``axes``)."""
+    if axes is None:
+        axes = tuple(range(ndim - len(window), ndim))
+    idx: list = [slice(None)] * ndim
+    for ax, (lo, hi) in zip(axes, window):
+        idx[ax] = slice(lo, hi)
+    return tuple(idx)
+
+
+def all_reduce_window(x, window=None, *, op: str = "sum",
+                      axis=None, reduce_dim: int | None = None,
+                      hierarchical: bool = False, window_axes=None,
+                      group: DeviceGroup | None = None,
+                      mesh_axes: Sequence[str] | None = None):
+    """Windowed all-reduce — generalizes the paper's ``kern_all_red_p2p_2d``.
+
+    The paper's NLINV port observes that after masking with M_Omega only
+    a centered 2-D section of Σ_g ρ_g is nonzero, so only that window is
+    put on the wire (4x fewer bytes for the FOV quarter).  This verb is
+    that trick as a first-class primitive: reduce ``reduce_dim`` locally,
+    all-reduce only ``window`` ((lo, hi) per trailing dim, or explicit
+    ``window_axes``), and return the result scattered back into zeros.
+    ``window=None`` is a plain all-reduce.
+
+    Eager form: ``x`` is a SegmentedArray — returns a CLONE container
+    whose ``reduce_dim`` (default: the segmented dim) has been summed
+    away globally.
+
+    In-shard_map form: ``x`` is the local shard; ``axis`` names the mesh
+    axis to reduce over (``axis=None``: no collective — the single-device
+    degenerate case).  ``hierarchical=True`` with ``group``/``mesh_axes``
+    stages the window psum over ICI then DCN (paper's cross-IOH path).
+    """
+    if isinstance(x, SegmentedArray):
+        seg = x
+        rdim = seg.dim if reduce_dim is None else reduce_dim
+        if rdim != seg.dim:
+            raise ValueError(
+                f"eager all_reduce_window reduces the segmented dim "
+                f"({seg.dim}); got reduce_dim={rdim}")
+        maxes = tuple(seg.mesh_axes)
+        body = partial(_all_reduce_window_local, window=window, op=op,
+                       axis=_axis_arg(maxes), reduce_dim=rdim,
+                       hierarchical=hierarchical, window_axes=window_axes,
+                       group=seg.group, mesh_axes=maxes)
+        out_spec = P(*[None] * (seg.data.ndim - 1))
+        # check_vma=False: the windowed scatter-into-zeros defeats JAX's
+        # replication inference even though the result is replicated.
+        out = compat.shard_map(body, mesh=seg.group.mesh, in_specs=seg.pspec,
+                               out_specs=out_spec,
+                               check_vma=False)(seg.data)
+        return SegmentedArray(out, seg.group, Policy.CLONE, 0, maxes)
+    return _all_reduce_window_local(x, window=window, op=op, axis=axis,
+                                    reduce_dim=reduce_dim,
+                                    hierarchical=hierarchical,
+                                    window_axes=window_axes,
+                                    group=group, mesh_axes=mesh_axes)
+
+
+def _all_reduce_window_local(x, *, window, op, axis, reduce_dim,
+                             hierarchical, window_axes, group, mesh_axes):
     pcoll, jred = _REDUCERS[op]
-    group = seg.group
+    if reduce_dim is not None:
+        x = jred(x, axis=reduce_dim)
 
-    def body(x):
-        x = jred(x, axis=seg.dim)
-        if hierarchical and op == "sum":
-            return hierarchical_psum(x, group, seg.mesh_axes)
-        return pcoll(x, _axis_arg(seg.mesh_axes))
+    def psum_part(v):
+        if axis is None:
+            return v
+        if hierarchical and op == "sum" and group is not None and mesh_axes:
+            return hierarchical_psum(v, group, mesh_axes)
+        return pcoll(v, axis)
 
-    out_spec = P(*[None] * (seg.data.ndim - 1))
-    # check_vma=False: after the in-pod all-gather the value IS replicated,
-    # but JAX's varying-axes inference cannot prove it.
-    out = jax.shard_map(body, mesh=group.mesh, in_specs=seg.pspec,
-                        out_specs=out_spec, check_vma=False)(seg.data)
-    return SegmentedArray(out, group, Policy.CLONE, 0, seg.mesh_axes)
+    if window is None:
+        return psum_part(x)
+    idx = _window_index(x.ndim, window, window_axes)
+    return jnp.zeros_like(x).at[idx].set(psum_part(x[idx]))
+
+
+def vdot(x, y, *, axis=None, policies=None):
+    """Segmented inner product ⟨x, y⟩ over mixed CLONE/NATURAL pytrees
+    (the 'scalar products of all data' CG entry of paper Table 1).
+
+    Eager form: ``x``/``y`` are pytrees of SegmentedArrays — the vdot of
+    the logical arrays.  No explicit collective: the global contraction
+    already spans all shards.
+
+    In-shard_map form: leaves are local shards, ``axis`` names the mesh
+    axis, and ``policies`` is a matching pytree of ``Policy`` leaves
+    saying which components are CLONE (replicated: counted once, never
+    psum'd) versus segmented (partial products: one psum for all of
+    them).  ``axis=None`` degenerates to the plain local vdot.
+    """
+    is_seg = lambda l: isinstance(l, SegmentedArray)
+    xl, xdef = jax.tree.flatten(x, is_leaf=is_seg)
+    yl, ydef = jax.tree.flatten(y, is_leaf=is_seg)
+    if xdef != ydef:
+        raise ValueError(f"vdot operands differ in structure: "
+                         f"{xdef} vs {ydef}")
+    if xl and all(is_seg(l) for l in xl):
+        return sum(jnp.vdot(a.data, b.data) for a, b in zip(xl, yl))
+
+    if policies is None:
+        pols = [Policy.NATURAL] * len(xl)
+    else:
+        pols = jax.tree.leaves(
+            policies, is_leaf=lambda p: isinstance(p, (Policy, tuple)))
+        if len(pols) != len(xl):
+            raise ValueError("policies pytree does not match operands")
+    clone_part = shard_part = None
+    for a, b, p in zip(xl, yl, pols):
+        pol = p[0] if isinstance(p, tuple) else p
+        v = jnp.vdot(a, b)
+        if pol is Policy.CLONE:
+            clone_part = v if clone_part is None else clone_part + v
+        else:
+            shard_part = v if shard_part is None else shard_part + v
+    total = None
+    if shard_part is not None:
+        total = lax.psum(shard_part, axis) if axis is not None else shard_part
+    if clone_part is not None:
+        total = clone_part if total is None else total + clone_part
+    return total
 
 
 def hierarchical_psum(x: jax.Array, group: DeviceGroup,
@@ -107,22 +229,42 @@ def hierarchical_psum(x: jax.Array, group: DeviceGroup,
 def copy(src: SegmentedArray, *, policy: Policy | None = None,
          dim: int | None = None,
          mesh_axes: tuple[str, ...] | None = None,
-         block: int | None = None) -> SegmentedArray:
+         block: int | None = None, halo: int | None = None) -> SegmentedArray:
     """Segmented-to-segmented copy (paper Fig. 3), i.e. re-segmentation.
 
     Same policy/dim -> pure device-to-device copy; otherwise XLA inserts
     the minimal collective (all-gather / all-to-all / permute) — the
     library's job in the paper of picking the best transfer path.
+
+    Metadata is validated and rebuilt for the destination layout: a
+    block-cyclic endpoint, a change of segmented dim, or re-splitting a
+    CLONE (whose data was never padded for the new dim) all go through
+    the logical array so ``orig_len``/``block``/``halo`` stay truthful.
     """
     policy = src.policy if policy is None else policy
     dim = src.dim if dim is None else dim
     mesh_axes = src.mesh_axes if mesh_axes is None else mesh_axes
-    if Policy.BLOCK in (policy, src.policy):
-        # block-cyclic layouts permute element order: go through gather
+    if policy is Policy.BLOCK:
+        block = src.block if block is None else block
+        if block is None:
+            raise ValueError("copy to BLOCK requires block=")
+    if halo is not None and policy is not Policy.OVERLAP2D:
+        raise ValueError("halo= is only meaningful for OVERLAP2D targets")
+    if halo is None and policy is Policy.OVERLAP2D:
+        halo = src.halo
+
+    if (Policy.BLOCK in (policy, src.policy) or dim != src.dim
+            or tuple(mesh_axes) != tuple(src.mesh_axes)
+            or (src.policy is Policy.CLONE and policy is not Policy.CLONE)):
+        # element order (block-cyclic) or padding metadata changes:
+        # rebuild from the logical array so the ctor re-derives it.
         return segment(gather(src), src.group, policy=policy, dim=dim,
-                       mesh_axes=mesh_axes, block=block or src.block)
+                       mesh_axes=mesh_axes, block=block,
+                       halo=0 if halo is None else halo)
+
+    new_halo = halo if policy is Policy.OVERLAP2D else 0
     dst = SegmentedArray(src.data, src.group, policy, dim, mesh_axes,
-                         orig_len=src.orig_len, halo=src.halo)
+                         orig_len=src.orig_len, block=None, halo=new_halo)
     return dst.with_data(jax.device_put(src.data, dst.sharding))
 
 
@@ -133,7 +275,6 @@ def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
     ax = _axis_arg(seg.mesh_axes)
 
     def body(x):
-        n = seg.nseg
         return lax.all_to_all(x, ax, split_axis=new_dim, concat_axis=seg.dim,
                               tiled=True)
 
@@ -141,8 +282,8 @@ def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
     out = list([None] * seg.data.ndim)
     out[new_dim] = ax
     out_spec = P(*out)
-    data = jax.shard_map(body, mesh=seg.group.mesh,
-                         in_specs=in_spec, out_specs=out_spec)(seg.data)
+    data = compat.shard_map(body, mesh=seg.group.mesh,
+                            in_specs=in_spec, out_specs=out_spec)(seg.data)
     import dataclasses
     return dataclasses.replace(seg, data=data, dim=new_dim,
                                orig_len=data.shape[new_dim])
@@ -169,7 +310,7 @@ def reduce_scatter(seg: SegmentedArray, op: str = "sum") -> SegmentedArray:
     merged_ndim = seg.data.ndim - 1
     out = [None] * merged_ndim
     out[0] = ax
-    data = jax.shard_map(body, mesh=seg.group.mesh,
-                         in_specs=seg.pspec, out_specs=P(*out))(seg.data)
+    data = compat.shard_map(body, mesh=seg.group.mesh,
+                            in_specs=seg.pspec, out_specs=P(*out))(seg.data)
     return SegmentedArray(data, seg.group, Policy.NATURAL, 0, seg.mesh_axes,
                           orig_len=merged_len)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .segmented import SegmentedArray
 
 
@@ -31,8 +32,8 @@ def fft2_batched(x: SegmentedArray, inverse: bool = False,
                  centered: bool = False) -> SegmentedArray:
     """Batched 2-D FFT over a batch-segmented container (no comm)."""
     body = lambda xl: _fft2_local(xl, inverse, centered)
-    out = jax.shard_map(body, mesh=x.group.mesh,
-                        in_specs=x.pspec, out_specs=x.pspec)(x.data)
+    out = compat.shard_map(body, mesh=x.group.mesh,
+                           in_specs=x.pspec, out_specs=x.pspec)(x.data)
     return x.with_data(out)
 
 

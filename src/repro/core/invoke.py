@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .runtime import DeviceGroup, current_group
 from .segmented import Policy, SegmentedArray
 
@@ -73,8 +74,8 @@ def invoke_kernel_all(fn: Callable, *args,
         out = [None] * _out_ndim_probe(probe_fn or fn, vals, in_specs, group)
         out[out_dim] = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
         out_specs = P(*out)
-    res = jax.shard_map(fn, mesh=group.mesh, in_specs=in_specs,
-                        out_specs=out_specs)(*vals)
+    res = compat.shard_map(fn, mesh=group.mesh, in_specs=in_specs,
+                           out_specs=out_specs)(*vals)
     if out_specs == P() or all(s is None for s in out_specs):
         return res
     return SegmentedArray(res, group, out_policy, out_dim, tuple(mesh_axes))
@@ -93,6 +94,58 @@ def _out_ndim_probe(fn, vals, in_specs, group) -> int:
     with group.mesh:
         out = jax.eval_shape(lambda *a: fn(*a), *local)
     return len(out.shape)
+
+
+def _is_policy_leaf(p) -> bool:
+    # (Policy, dim) pairs only — a tuple of bare Policy members is a
+    # container (e.g. the out_policies of a two-output kernel).
+    return isinstance(p, Policy) or (
+        isinstance(p, tuple) and len(p) == 2
+        and isinstance(p[0], Policy) and isinstance(p[1], int))
+
+
+def policy_pspec(p, axis) -> P:
+    """Map a segmentation policy leaf — ``Policy`` or ``(Policy, dim)`` —
+    to its PartitionSpec."""
+    dim = 0
+    if isinstance(p, tuple):
+        p, dim = p
+    if p is Policy.CLONE:
+        return P()
+    return P(*([None] * dim + [axis]))
+
+
+def make_spmd(fn: Callable, group: DeviceGroup | None = None, *,
+              in_policies, out_policies,
+              mesh_axes: tuple[str, ...] = ("data",),
+              check_vma: bool = True, donate_argnums=(), jit: bool = True):
+    """Compile an SPMD kernel from segmentation *policies* (paper §2.5's
+    ``invoke_kernel_all`` for algorithms, not arrays).
+
+    ``in_policies`` is one pytree per positional argument and
+    ``out_policies`` one for the result; leaves are ``Policy`` members or
+    ``(Policy, dim)`` pairs (``Policy`` alone segments dim 0).  The body
+    sees local shards and may call the comm verbs' in-shard_map forms.
+    Downstream layers never construct a PartitionSpec or touch shard_map:
+    this is the single launch point the container layer exposes.
+
+    A 1-device group is the degenerate case — same program, the
+    collectives are no-ops — which is how single- and multi-device
+    callers share one code path.
+    """
+    group = current_group(group)
+    axis = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+    to_specs = lambda pol: jax.tree.map(lambda p: policy_pspec(p, axis),
+                                        pol, is_leaf=_is_policy_leaf)
+    sm = compat.shard_map(fn, mesh=group.mesh,
+                          in_specs=tuple(to_specs(p) for p in in_policies),
+                          out_specs=to_specs(out_policies),
+                          check_vma=check_vma)
+    if not jit:
+        if donate_argnums:
+            raise ValueError("donate_argnums requires jit=True")
+        return sm
+    return jax.jit(sm, donate_argnums=donate_argnums)
 
 
 def invoke_kernel(fn: Callable, *args, rank: int,

@@ -20,6 +20,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from . import compat
+
 # Axis names that cross the data-center network rather than ICI.  The
 # paper's topology split (P2P inside an IOH vs. host-staged across IOHs)
 # maps onto this boundary.
@@ -52,14 +54,17 @@ class DeviceGroup:
             shape = (ndev,)
         if math.prod(shape) != ndev:
             raise ValueError(f"mesh shape {shape} != device count {ndev}")
-        mesh = jax.make_mesh(tuple(shape), tuple(axes),
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-        return cls(mesh)
+        return cls(compat.make_mesh(tuple(shape), tuple(axes)))
 
     @classmethod
     def subset(cls, n: int, axes: Sequence[str] = ("data",)) -> "DeviceGroup":
         """Restrict to the first ``n`` devices (MGPU ``dev_group`` ctor)."""
-        devs = np.asarray(jax.devices()[:n]).reshape((n,))
+        avail = jax.devices()
+        if n > len(avail):
+            raise ValueError(
+                f"requested {n} devices, host has {len(avail)} (simulate "
+                f"more with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        devs = np.asarray(avail[:n]).reshape((n,))
         return cls(Mesh(devs, tuple(axes)))
 
     @classmethod
@@ -106,10 +111,7 @@ def current_group(group: DeviceGroup | None = None) -> DeviceGroup:
     """Default-group resolution: explicit arg > ambient mesh > all devices."""
     if group is not None:
         return group
-    env = jax.sharding.get_abstract_mesh()
-    if env is not None and not env.empty:  # inside a `with mesh:` scope
-        try:
-            return DeviceGroup(jax.sharding.get_concrete_mesh())
-        except Exception:
-            pass
+    mesh = compat.ambient_mesh()  # inside a `with mesh:` scope
+    if mesh is not None:
+        return DeviceGroup(mesh)
     return DeviceGroup.all_devices()

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .runtime import DeviceGroup, current_group
 
 
@@ -223,5 +224,6 @@ def overlap2d_map(seg: SegmentedArray,
         return out
 
     spec = seg.pspec
-    out = jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)(seg.data)
+    out = compat.shard_map(body, mesh=mesh, in_specs=spec,
+                           out_specs=spec)(seg.data)
     return seg.with_data(out)

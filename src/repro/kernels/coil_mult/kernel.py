@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.compat import pallas_tpu_compiler_params
+
 
 def _fwd_kernel(cr, ci, xr, xi, zr, zi):
     a, b = cr[0], ci[0]
@@ -51,7 +53,7 @@ def coil_forward_pallas(cr, ci, xr, xi, *, bx=32, interpret=True):
             pl.BlockSpec((1, bx, Y), lambda j, i: (j, i, 0)),
         ],
         out_shape=[jax.ShapeDtypeStruct((J, X, Y), cr.dtype)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(cr, ci, xr, xi)
@@ -99,7 +101,7 @@ def coil_adjoint_pallas(cr, ci, zr, zi, mask, *, bx=32, interpret=True):
         ],
         out_shape=[jax.ShapeDtypeStruct((X, Y), cr.dtype)] * 2,
         scratch_shapes=[pltpu.VMEM((bx, Y), jnp.float32)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cr, ci, zr, zi, mask)

@@ -27,6 +27,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.compat import pallas_tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -138,7 +140,7 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, causal=True, window=None,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, S, Dv), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

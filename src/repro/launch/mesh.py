@@ -9,13 +9,14 @@ from __future__ import annotations
 
 import jax
 
+from ..core import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod (TPU v5e); 2 pods over DCN when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_axes(mesh):

@@ -39,8 +39,8 @@ def build(args):
     mesh_shape = tuple(int(x) for x in args.mesh.split("x")) \
         if args.mesh else (ndev,)
     axes = ("data", "model")[: len(mesh_shape)]
-    mesh = jax.make_mesh(mesh_shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.core import compat
+    mesh = compat.make_mesh(mesh_shape, axes)
     return cfg, mesh
 
 

@@ -92,10 +92,10 @@ def hint(x, *spec):
     Lets model code steer GSPMD at known decision points (e.g. keep the
     decode KV cache sequence-sharded instead of gathering it)."""
     try:
-        am = jax.sharding.get_abstract_mesh()
-        if am is None or am.empty:
+        from ..core.compat import ambient_axis_names
+        names = set(ambient_axis_names())
+        if not names:
             return x
-        names = set(am.shape.keys())
         for a in spec:
             for ax in (a if isinstance(a, tuple) else (a,)):
                 if isinstance(ax, str) and ax not in names:

@@ -5,6 +5,12 @@
 
 with alpha_n = alpha0 * q^n and the previous frame as x_ref (temporal
 regularization — the reason movie frames cannot be pipelined, §3.2).
+
+The two cross-device reduction points are injected: ``channel_sum`` (the
+Σ_j in DG^H) and ``dot`` (the CG scalar products).  The defaults are the
+local single-program math; ``recon.Reconstructor`` passes the repro.core
+verbs (``comm.all_reduce_window`` / ``comm.vdot``), which is the only
+way device communication ever enters this solver.
 """
 
 from __future__ import annotations
@@ -18,8 +24,10 @@ from .operators import uaxpy, udot, uzeros
 
 def irgnm(ops, y, x0, x_ref=None, *, newton: int = 7, cg_iters: int = 30,
           alpha0: float = 1.0, q: float = 1.0 / 3.0,
-          channel_sum=None, dot=udot):
+          channel_sum=None, dot=None):
     """Returns the solution pytree u = {rho, chat}."""
+    if dot is None:
+        dot = udot
     x = x0
     if x_ref is None:
         x_ref = x0   # pull toward the initial guess (rho=1, chat=0);

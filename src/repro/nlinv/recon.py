@@ -1,15 +1,21 @@
-"""Reconstruction drivers: single-device, distributed (channel-split),
-and the real-time movie loop with temporal regularization.
+"""Reconstruction drivers, built entirely on the repro.core container /
+verb layer (the paper's §3.2 decomposition as policies, not specs).
 
-The distributed path is the paper's §3.2 decomposition: coil channels
-segmented across the device group (MGPU segmented container), the image
-rho CLONEd, and the channel sum in DG^H executed as a block-wise
-all-reduce.  ``channel_sum`` strategy:
+Coil data ``y`` and the coil coefficients ``chat`` are NATURAL-segmented
+across the device group, the image ``rho`` and acquisition geometry are
+CLONEd, the channel sum in DG^H is ``comm.all_reduce_window`` (the
+paper's ``kern_all_red_p2p_2d`` 4x-fewer-bytes trick when windowed to
+the centered FOV quarter), and the CG scalar products are ``comm.vdot``
+over the CLONE+NATURAL mixed pytree.  ``Reconstructor`` is the one
+frame-solver API; a ``DeviceGroup`` of size 1 is the degenerate case —
+the same program with no-op collectives.
 
-  full   psum of the whole doubled grid (paper-faithful baseline)
+``channel_sum`` strategy:
+
+  full   all-reduce the whole doubled grid (paper-faithful baseline)
   crop   M_Omega zeroes everything outside the centered FOV quarter, so
-         only that 2-D section is reduced (the paper's kern_all_red_p2p_2d
-         insight; 4x fewer bytes on the wire) and the result re-padded.
+         only that 2-D window is reduced and scattered back (the paper's
+         kern_all_red_p2p_2d insight; 4x fewer bytes on the wire).
 """
 
 from __future__ import annotations
@@ -19,83 +25,149 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
+from ..core import comm
+from ..core.invoke import make_spmd
 from ..core.runtime import DeviceGroup
-from .irgnm import irgnm, postprocess
-from .operators import make_ops, sobolev_weight, udot, uinit
+from ..core.segmented import Policy
+from .irgnm import irgnm
+from .operators import make_ops, sobolev_weight, uinit
+
+# Segmentation of the unknown pytree u = {rho, chat} (paper §3.2).
+U_POLICIES = {"rho": Policy.CLONE, "chat": Policy.NATURAL}
 
 
-def _csum_full(axis):
-    return lambda prod: lax.psum(jnp.sum(prod, axis=0), axis)
+class Reconstructor:
+    """One NLINV frame solver over a DeviceGroup.
+
+    The compiled function (``.fn``) maps
+    ``(y, mask, fov, weight, x0, x_ref) -> (u, image)`` with ``y``/
+    ``chat`` coil-segmented and everything else replicated.  ``__call__``
+    forwards to it.  ``.fn_donate_carry`` is the same program with the
+    Newton carry ``(x0, x_ref)`` buffers donated — the streaming engine's
+    steady-state path.
+    """
+
+    def __init__(self, group: DeviceGroup | None = None, axis: str = "data",
+                 *, newton: int = 7, cg_iters: int = 30,
+                 channel_sum: str = "crop", hierarchical: bool = False):
+        if channel_sum not in ("full", "crop"):
+            raise ValueError(f"channel_sum must be full|crop: {channel_sum}")
+        if group is None:
+            group = DeviceGroup.subset(1, (axis,))
+        self.group, self.axis = group, axis
+        self.newton, self.cg_iters = newton, cg_iters
+        self.channel_sum, self.hierarchical = channel_sum, hierarchical
+        self._compiled: dict[bool, object] = {}
+
+    # -- the shard-local frame program (pure jnp + core verbs) ------------
+    def _frame(self, y, mask, fov, weight, x0, x_ref):
+        crop = self.channel_sum == "crop"
+
+        def csum(prod):
+            g = prod.shape[-1]
+            q = g // 4
+            win = ((q, 3 * q), (q, 3 * q)) if crop else None
+            return comm.all_reduce_window(
+                prod, win, axis=self.axis, reduce_dim=0,
+                hierarchical=self.hierarchical, group=self.group,
+                mesh_axes=(self.axis,))
+
+        def dot(a, b):
+            return comm.vdot(a, b, axis=self.axis, policies=U_POLICIES)
+
+        ops = make_ops(mask, fov, weight)
+        u = irgnm(ops, y, x0, x_ref, newton=self.newton,
+                  cg_iters=self.cg_iters, channel_sum=csum, dot=dot)
+        c = ops.coils(u["chat"])
+        rss = comm.all_reduce_window(jnp.abs(c) ** 2, None,
+                                     axis=self.axis, reduce_dim=0)
+        return u, u["rho"] * jnp.sqrt(rss)
+
+    def _build(self, donate: bool):
+        clone = Policy.CLONE
+        in_pol = (Policy.NATURAL, clone, clone, clone,
+                  U_POLICIES, U_POLICIES)
+        return make_spmd(self._frame, self.group,
+                         in_policies=in_pol,
+                         out_policies=(U_POLICIES, clone),
+                         mesh_axes=(self.axis,), check_vma=False,
+                         donate_argnums=(4, 5) if donate else ())
+
+    @property
+    def fn(self):
+        if False not in self._compiled:
+            self._compiled[False] = self._build(donate=False)
+        return self._compiled[False]
+
+    @property
+    def fn_donate_carry(self):
+        if True not in self._compiled:
+            self._compiled[True] = self._build(donate=True)
+        return self._compiled[True]
+
+    def __call__(self, y, mask, fov, weight, x0, x_ref):
+        return self.fn(y, mask, fov, weight, x0, x_ref)
+
+    # -- carry/constant placement through the verbs -----------------------
+    def init_carry(self, ncoils: int, grid: int):
+        """Device-placed Newton carry (rho=1 CLONE, chat=0 NATURAL)."""
+        u = uinit(ncoils, grid)
+        return {"rho": comm.broadcast(u["rho"], self.group).data,
+                "chat": comm.scatter(u["chat"], self.group,
+                                     policy=Policy.NATURAL).data}
+
+    def put_frame(self, y):
+        """Segment one frame of coil data onto the group (coil dim 0)."""
+        return comm.scatter(y, self.group, policy=Policy.NATURAL).data
+
+    def put_const(self, x):
+        """Replicate a per-frame constant (mask/fov/weight)."""
+        return comm.broadcast(x, self.group).data
 
 
-def _csum_crop(axis):
-    def cs(prod):
-        g = prod.shape[-1]
-        q = g // 4
-        local = jnp.sum(prod, axis=0)
-        crop = lax.psum(local[q:3 * q, q:3 * q], axis)
-        return jnp.zeros_like(local).at[q:3 * q, q:3 * q].set(crop)
-    return cs
+@functools.lru_cache(maxsize=None)
+def _single_device_reconstructor(newton: int, cg_iters: int) -> Reconstructor:
+    # "full" channel sum: bit-identical to the classic unsegmented solver.
+    return Reconstructor(newton=newton, cg_iters=cg_iters,
+                         channel_sum="full")
 
 
-def _dist_dot(axis):
-    def dot(x, y):
-        local = jnp.vdot(x["chat"], y["chat"])
-        return jnp.vdot(x["rho"], y["rho"]) + lax.psum(local, axis)
-    return dot
-
-
-@functools.partial(jax.jit, static_argnames=("newton", "cg_iters"))
 def reconstruct_frame(y, mask, fov, weight, x0, x_ref, *,
                       newton=7, cg_iters=30):
-    """Single-device NLINV for one frame.  y: (J, X, Y)."""
-    ops = make_ops(mask, fov, weight)
-    u = irgnm(ops, y, x0, x_ref, newton=newton, cg_iters=cg_iters)
-    return u, postprocess(ops, u)
+    """Single-device NLINV for one frame — the degenerate Reconstructor.
+    y: (J, X, Y)."""
+    rec = _single_device_reconstructor(newton, cg_iters)
+    return rec(y, mask, fov, weight, x0, x_ref)
 
 
 def make_dist_reconstruct(group: DeviceGroup, axis: str = "data", *,
                           newton=7, cg_iters=30, channel_sum="crop"):
-    """shard_map'd NLINV: coils split over ``axis`` (paper §3.2)."""
-    mesh = group.mesh
-    cs = {"full": _csum_full, "crop": _csum_crop}[channel_sum](axis)
-    dot = _dist_dot(axis)
-
-    def frame(y, mask, fov, weight, x0, x_ref):
-        ops = make_ops(mask, fov, weight)
-        u = irgnm(ops, y, x0, x_ref, newton=newton, cg_iters=cg_iters,
-                  channel_sum=cs, dot=dot)
-        c = ops.coils(u["chat"])
-        rss = lax.psum(jnp.sum(jnp.abs(c) ** 2, axis=0), axis)
-        img = u["rho"] * jnp.sqrt(rss)
-        return u, img
-
-    uspec = {"rho": P(), "chat": P(axis)}
-    fn = jax.shard_map(
-        frame, mesh=mesh,
-        in_specs=(P(axis), P(), P(), P(), uspec, uspec),
-        out_specs=(uspec, P()), check_vma=False)
-    return jax.jit(fn)
+    """Compiled distributed NLINV: coils split over ``axis`` (paper §3.2).
+    Returns the jitted frame function (kept for callers that want the
+    bare callable; new code should hold the ``Reconstructor``)."""
+    return Reconstructor(group, axis, newton=newton, cg_iters=cg_iters,
+                         channel_sum=channel_sum).fn
 
 
-def pad_channels(y, nseg):
+def pad_channels(y, nseg, axis: int = 0):
     """Zero-pad the coil dim to a multiple of the group size (zero
     channels are exact no-ops for all NLINV sums)."""
-    J = y.shape[0]
+    J = y.shape[axis]
     Jp = -(-J // nseg) * nseg
     if Jp == J:
         return y
-    return np.concatenate(
-        [y, np.zeros((Jp - J,) + y.shape[1:], y.dtype)], axis=0)
+    pad = np.zeros(y.shape[:axis] + (Jp - J,) + y.shape[axis + 1:], y.dtype)
+    return np.concatenate([y, pad], axis=axis)
 
 
 def reconstruct_movie(data, *, newton=7, cg_iters=30, damping=0.9,
                       frame_fn=None):
-    """Sequential movie loop (frames depend on x_ref: no pipelining,
-    paper §3.2).  Returns (F, X, Y) images."""
+    """Blocking sequential movie loop (frames depend on x_ref: no frame
+    parallelism, paper §3.2).  Returns (F, X, Y) images.  This is the
+    latency baseline; ``repro.nlinv.stream.FrameStream`` is the
+    transfer-overlapped real-time engine.
+    """
     y, masks, fov = data["y"], data["masks"], data["fov"]
     F, J, g, _ = y.shape
     weight = sobolev_weight(g)

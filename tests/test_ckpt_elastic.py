@@ -17,8 +17,8 @@ tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
 save(tmp, 3, tree)
 
 # restore onto an 8-device mesh with 2D sharding (elastic scale-UP)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core import compat
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 sh = {"w": NamedSharding(mesh, P("data", "model")),
       "opt": {"m": NamedSharding(mesh, P("data"))}}
 like = {"w": jnp.zeros((8, 8), jnp.float32),

@@ -8,12 +8,16 @@ test_core_multidevice.py.
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DeviceGroup, Policy, segment, gather, reduce,
                         all_reduce, blas)
 
-G = DeviceGroup.all_devices((1,), ("data",))
+# subset(1): robust to any ambient --xla_force_host_platform_device_count
+G = DeviceGroup.subset(1, ("data",))
 
 
 @settings(max_examples=25, deadline=None)

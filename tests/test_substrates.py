@@ -39,8 +39,8 @@ def test_train_loop_loss_decreases():
     """qwen3-smoke on the Markov pipeline: loss must drop (integration)."""
     cfg = dataclasses.replace(get_smoke("qwen3-0.6b"),
                               compute_dtype="float32")
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((1,), ("data",))
     state = make_train_state(cfg, jax.random.PRNGKey(0))
     step_fn, build = make_train_step(cfg, mesh, base_lr=1e-2, warmup=5,
                                      total=120, remat=False, donate=False)
@@ -61,8 +61,8 @@ def test_train_loop_loss_decreases():
 def test_microbatch_accumulation_matches_full_batch():
     cfg = dataclasses.replace(get_smoke("llama3.2-3b"),
                               compute_dtype="float32")
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((1,), ("data",))
     tok = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
     lab = jnp.roll(tok, -1, 1)
     s0 = make_train_state(cfg, jax.random.PRNGKey(0))
@@ -178,16 +178,17 @@ def test_compressed_psum_single_device_accuracy():
     """On a 1-device mesh the compressed psum must equal the plain value
     within int8 quantization error, and error feedback must push the
     *accumulated* estimate toward exact."""
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((1,), ("d",))
     from jax.sharding import PartitionSpec as P
     g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01
 
     def run(gg, err):
         return compressed_psum(gg, "d", err)
 
-    f = jax.shard_map(run, mesh=mesh, in_specs=(P(), P()),
-                      out_specs=(P(), P()))
+    from repro.core.compat import shard_map
+    f = shard_map(run, mesh=mesh, in_specs=(P(), P()),
+                  out_specs=(P(), P()))
     out, err = f(g, jnp.zeros_like(g))
     q_err = float(jnp.abs(out - g).max())
     assert q_err < 0.01 * 2 / 127 + 1e-6        # block absmax / 127
