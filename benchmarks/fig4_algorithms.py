@@ -12,14 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DeviceGroup, Policy, blas, fft, segment
+from repro.core import Environment, Policy, blas, fft
 from repro.core.runtime import HW
 
 from .common import allreduce_time, fmt_row, time_fn
 
 
 def rows(quick=False):
-    g = DeviceGroup.all_devices((1,), ("data",))
+    comm = Environment().subgroup(1)
     out = []
     sizes = [128, 256] if quick else [128, 256, 512]
     for n in sizes:
@@ -27,7 +27,7 @@ def rows(quick=False):
         x = (np.random.randn(batch, n, n) +
              1j * np.random.randn(batch, n, n)).astype(np.complex64)
         y = x[..., ::-1].copy()
-        sx, sy = segment(x, g), segment(y, g)
+        sx, sy = comm.container(x), comm.container(y)
 
         f = jax.jit(lambda a: fft.fft2_batched(
             fft.fft2_batched(a), inverse=True).data)
@@ -44,8 +44,8 @@ def rows(quick=False):
 
         A = np.random.randn(n, n).astype(np.float32)
         B = np.random.randn(n, n).astype(np.float32)
-        sA = segment(A, g, dim=1)
-        sB = segment(B, g, dim=0)
+        sA = comm.container(A, dim=1)
+        sB = comm.container(B, dim=0)
         m = jax.jit(lambda u, v: blas.gemm_ksplit(u, v).data)
         us = time_fn(m, sA, sB)
         # modeled: local matmul scales 1/G, then psum of the full (n,n)

@@ -10,7 +10,7 @@ decays with P2P hops.
 
 import numpy as np
 
-from repro.core import DeviceGroup, broadcast, gather, reduce, segment
+from repro.core import Environment
 from repro.core.runtime import HW
 
 from .common import allreduce_time, copy_time, fmt_row, time_fn
@@ -20,7 +20,7 @@ PCIE_BW = 16e9          # host->device, per path (the paper's 8-GPU box
 
 
 def rows(quick=False):
-    g = DeviceGroup.all_devices((1,), ("data",))
+    comm = Environment().subgroup(1)
     out = []
     n = 256 if quick else 512
     batch = 8
@@ -28,27 +28,27 @@ def rows(quick=False):
          np.random.randn(batch, n, n)).astype(np.complex64)
     nbytes = x.nbytes
 
-    us = time_fn(lambda: segment(x, g).data)
+    us = time_fn(lambda: comm.container(x).data)
     der = ";".join(
         f"t{G}={copy_time(nbytes / G, PCIE_BW) * 1e6:.0f}us"
         for G in (1, 2, 4, 8))
     out.append(fmt_row(f"fig5_strong_copy_{batch}x{n}", us, der))
 
-    us = time_fn(lambda: segment(x[:1], g).data)   # per-device constant
+    us = time_fn(lambda: comm.container(x[:1]).data)   # per-device constant
     der = ";".join(
         f"t{G}={copy_time(nbytes / batch, PCIE_BW) * 1e6:.0f}us"
         for G in (1, 2, 4, 8))
     out.append(fmt_row(f"fig5_weak_copy_1x{n}", us, der))
 
-    us = time_fn(lambda: broadcast(x[0], g).data)
+    us = time_fn(lambda: comm.bcast(x[0]).data)
     one = x[0].nbytes
     der = ";".join(
         f"t{G}={(copy_time(one, PCIE_BW) + (G - 1) * one / HW['ici_bw']) * 1e6:.0f}us"
         for G in (1, 2, 4, 8))
     out.append(fmt_row(f"fig5_broadcast_{n}", us, der))
 
-    sm = segment(x, g)
-    us = time_fn(lambda: reduce(sm))
+    sm = comm.container(x)
+    us = time_fn(lambda: comm.reduce(sm))
     der = ";".join(
         f"t{G}={(allreduce_time(one, G) / 2 + copy_time(one, PCIE_BW)) * 1e6:.0f}us"
         for G in (1, 2, 4, 8))

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Environment
 from repro.core.runtime import HW
 from repro.nlinv import phantom
 from repro.nlinv.recon import Reconstructor, reconstruct_frame
@@ -95,7 +96,8 @@ def rows(quick=False):
     # the report artifact is the recon-service SLO evidence.
     d = phantom.make_dataset(n=32, ncoils=4, nspokes=11,
                              frames=2 if quick else 5)
-    rec = Reconstructor(newton=6, cg_iters=10, channel_sum="crop")
+    rec = Reconstructor(Environment().subgroup(1), newton=6, cg_iters=10,
+                        channel_sum="crop")
     _, rep = FrameStream(rec, damping=0.9).run(
         d["y"], d["masks"], d["fov"], report_path=LATENCY_ARTIFACT)
     s = rep.summary()

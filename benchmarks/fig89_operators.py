@@ -48,10 +48,10 @@ def rows(quick=False):
         batch = 8
         x = (np.random.randn(batch, size, size) + 1j *
              np.random.randn(batch, size, size)).astype(np.complex64)
-        from repro.core import DeviceGroup, segment
+        from repro.core import Environment
         from repro.core import fft as cfft
-        gdev = DeviceGroup.all_devices((1,), ("data",))
-        sx = segment(x, gdev)
+        comm = Environment().subgroup(1)
+        sx = comm.container(x)
         us = time_fn(jax.jit(lambda a: cfft.fft2_batched(a).data), sx)
         ar = {G: allreduce_time(size * size * 8, G) * 1e6 for G in (2, 4)}
         out.append(fmt_row(

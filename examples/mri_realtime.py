@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DeviceGroup
+from repro.core import Environment
 from repro.nlinv import phantom
 from repro.nlinv.gridding import gridding_recon
 from repro.nlinv.recon import Reconstructor
@@ -51,8 +51,8 @@ def main():
                                 nspokes=args.spokes, frames=args.frames)
 
     ndev = max(args.devices, 1)
-    group = DeviceGroup.subset(ndev)
-    rec = Reconstructor(group, newton=args.newton, cg_iters=20,
+    comm = Environment().subgroup(ndev)
+    rec = Reconstructor(comm, newton=args.newton, cg_iters=20,
                         channel_sum=args.channel_sum)
     if ndev > 1:
         print(f"distributed: {ndev} devices, coils NATURAL-segmented, "

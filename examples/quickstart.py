@@ -2,43 +2,53 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors the paper's §2 walk-through: create an environment (device
-group), build segmented containers, move data with the MPI-like verbs,
-call segmented FFT/BLAS, and launch a custom kernel on every device.
-Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real
+Mirrors the paper's §2 walk-through: create an environment, bind a
+communicator to a device group, build segmented containers, move data
+with the MPI-like verb *methods* (collectives + point-to-point), call
+segmented FFT/BLAS, and launch a custom kernel on every device.  Run
+with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real
 multi-device segmentation on CPU.
 """
 
 import numpy as np
 
 import jax.numpy as jnp
-from repro.core import (DeviceGroup, Policy, all_reduce, blas, broadcast,
-                        fft, gather, invoke_kernel_all, reduce, segment)
+from repro.core import Environment, Policy, blas, fft
 
 # -- environment / dev_group (paper §2.1) ----------------------------------
-group = DeviceGroup.all_devices()
-print(f"environment: {group.ndev} device(s), axes {group.axis_names}")
+env = Environment()
+comm = env.world                       # all devices, one "data" axis
+print(f"environment: {env}; communicator: {comm}")
 
 # -- segmented containers (paper §2.2) --------------------------------------
 x = np.random.randn(8, 64, 64).astype(np.complex64)   # 8 matrices
-seg = segment(x, group)                                # natural split
+seg = comm.container(x)                                # natural split
 print("segments:", seg.segments()[0], "x", seg.nseg)
 
-clone = broadcast(x[0], group)                         # CLONE policy
-blocks = segment(x, group, policy=Policy.BLOCK, block=2)
-assert np.allclose(gather(blocks), x)
+clone = comm.bcast(x[0])                               # CLONE policy
+blocks = comm.container(x, policy=Policy.BLOCK, block=2)
+assert np.allclose(comm.gather(blocks), x)
 
 # -- MPI-like communication (paper §2.3, Fig. 3) ----------------------------
-summed = reduce(seg)                    # one matrix: sum over segments
-summed_everywhere = all_reduce(seg)     # ... CLONEd on every device
+summed = comm.reduce(seg)               # one matrix: sum over segments
+summed_everywhere = seg.allreduce()     # ... CLONEd on every device
 print("reduce == sum:", np.allclose(summed, x.sum(0), atol=1e-4))
+full = seg.allgather()                  # MPI_Allgather -> CLONE container
+print("allgather:", np.allclose(np.asarray(full.data), x, atol=0))
+
+# -- point-to-point (paper's P2P path; lax.ppermute) ------------------------
+ring = seg.shift(1)                     # each segment to the next device
+print("shift ring:", comm.gather(ring).shape, "(segments rotated by 1)")
+pairs = [(0, 1), (1, 0)] if comm.size > 1 else [(0, 0)]
+swapped = comm.send_recv(seg, pairs)    # pairwise exchange
+print("send_recv:", swapped.global_shape)
 
 # -- segmented libraries (paper §2.4) ----------------------------------------
 k = fft.fft2_batched(seg, centered=True)               # batched FFT
 img = fft.fft2_batched(k, inverse=True, centered=True)
-print("fft roundtrip:", np.allclose(gather(img), x, atol=1e-4))
+print("fft roundtrip:", np.allclose(comm.gather(img), x, atol=1e-4))
 
-y = segment(np.random.randn(8, 64, 64).astype(np.complex64), group)
+y = comm.container(np.random.randn(8, 64, 64).astype(np.complex64))
 z = blas.axpy(2.0 + 1j, seg, y)                        # a*X + Y
 print("dot <x,y> =", complex(blas.dot(seg, y)))
 
@@ -46,6 +56,6 @@ print("dot <x,y> =", complex(blas.dot(seg, y)))
 def my_kernel(xl, yl):                  # receives local ranges
     return jnp.abs(xl) ** 2 + jnp.abs(yl) ** 2
 
-power = invoke_kernel_all(my_kernel, seg, y, group=group)
-print("invoke_kernel_all ->", power.global_shape, power.data.dtype)
+power = comm.invoke_all(my_kernel, seg, y)
+print("invoke_all ->", power.global_shape, power.data.dtype)
 print("quickstart OK")

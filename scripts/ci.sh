@@ -10,6 +10,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Fail fast (~1s) on API drift before the multi-minute sweeps; the full
+# sweeps below re-collect it, which is harmless.
+echo "=== public-API snapshot (repro.core / Communicator surface) ==="
+python -m pytest tests/test_api_surface.py -q
+
 echo "=== tier-1: single device ==="
 python -m pytest -x -q "$@"
 

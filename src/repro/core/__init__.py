@@ -3,20 +3,83 @@
 Segmented containers + MPI-like communication verbs + kernel invocation +
 segmented FFT/BLAS, adapted from single-node multi-GPU (PCIe/IOH) to
 multi-pod TPU (ICI/DCN).  See DESIGN.md §2 for the adaptation map.
+
+The stable API surface is object-oriented (paper §2.1/§2.3):
+``Environment`` discovers devices and mints group-bound
+``Communicator`` objects whose *methods* are the MPI-like verbs;
+containers built by ``Communicator.container`` carry fluent forms of the
+verbs (``x.allreduce()``, ``x.to(Policy.CLONE)``, ...).  The free
+functions below (``segment``/``broadcast``/``all_reduce``/...) are the
+pre-Communicator surface, kept as thin deprecated shims.
 """
 
+import functools as _functools
+import warnings as _warnings
+
 from . import compat
-from .runtime import DeviceGroup, current_group, HW, DCN_AXES
-from .segmented import Policy, SegmentedArray, segment, gather, overlap2d_map
-from .comm import (broadcast, scatter, reduce, all_reduce, all_reduce_window,
-                   vdot, copy, all_to_all, reduce_scatter, hierarchical_psum)
-from .invoke import (invoke_kernel, invoke_kernel_all, make_spmd, PassThrough,
-                     dev_rank)
-from .sync import fence, barrier, barrier_fence, ordered
+from .runtime import DeviceGroup, HW, DCN_AXES
+from .runtime import current_group as _current_group
+from .segmented import Policy, SegmentedArray
+from .segmented import (segment as _segment, gather as _gather,
+                        overlap2d_map as _overlap2d_map)
+from . import comm as _comm
+from .env import Environment, Communicator
+from .invoke import PassThrough, dev_rank
+from .invoke import (invoke_kernel as _invoke_kernel,
+                     invoke_kernel_all as _invoke_kernel_all,
+                     make_spmd as _make_spmd)
+from .sync import fence, ordered
+from .sync import barrier as _barrier, barrier_fence as _barrier_fence
 from . import blas, fft
+
+
+def _deprecated(fn, name: str, replacement: str):
+    """Wrap a free-function verb as a deprecation shim (same signature)."""
+    @_functools.wraps(fn)
+    def shim(*args, **kw):
+        _warnings.warn(
+            f"repro.core.{name} is deprecated; use {replacement}",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kw)
+    shim.__deprecated__ = replacement
+    return shim
+
+
+# -- deprecated free-function surface (pre-Communicator API) ---------------
+current_group = _deprecated(_current_group, "current_group",
+                            "an explicit Environment()/Communicator")
+segment = _deprecated(_segment, "segment", "Communicator.container")
+gather = _deprecated(_gather, "gather",
+                     "Communicator.gather / SegmentedArray.gather")
+overlap2d_map = _deprecated(_overlap2d_map, "overlap2d_map",
+                            "SegmentedArray.halo_exchange")
+broadcast = _deprecated(_comm.broadcast, "broadcast", "Communicator.bcast")
+scatter = _deprecated(_comm.scatter, "scatter", "Communicator.scatter")
+reduce = _deprecated(_comm.reduce, "reduce", "Communicator.reduce")
+all_reduce = _deprecated(_comm.all_reduce, "all_reduce",
+                         "Communicator.allreduce")
+all_reduce_window = _deprecated(_comm.all_reduce_window, "all_reduce_window",
+                                "Communicator.allreduce_window")
+vdot = _deprecated(_comm.vdot, "vdot", "Communicator.vdot")
+copy = _deprecated(_comm.copy, "copy",
+                   "Communicator.copy / SegmentedArray.to")
+all_to_all = _deprecated(_comm.all_to_all, "all_to_all",
+                         "Communicator.alltoall")
+reduce_scatter = _deprecated(_comm.reduce_scatter, "reduce_scatter",
+                             "Communicator.reduce_scatter")
+hierarchical_psum = _comm.hierarchical_psum   # in-shard_map primitive
+invoke_kernel = _deprecated(_invoke_kernel, "invoke_kernel",
+                            "Communicator.invoke")
+invoke_kernel_all = _deprecated(_invoke_kernel_all, "invoke_kernel_all",
+                                "Communicator.invoke_all")
+make_spmd = _deprecated(_make_spmd, "make_spmd", "Communicator.spmd")
+barrier = _deprecated(_barrier, "barrier", "Communicator.barrier")
+barrier_fence = _deprecated(_barrier_fence, "barrier_fence",
+                            "Communicator.barrier_fence")
 
 __all__ = [
     "compat",
+    "Environment", "Communicator",
     "DeviceGroup", "current_group", "HW", "DCN_AXES",
     "Policy", "SegmentedArray", "segment", "gather", "overlap2d_map",
     "broadcast", "scatter", "reduce", "all_reduce", "all_reduce_window",

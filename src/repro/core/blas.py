@@ -18,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 from . import compat
 from .runtime import DeviceGroup
 from .segmented import Policy, SegmentedArray
-from .comm import _axis_arg
+from .comm import _axis_arg  # noqa: F401  (gemm_ksplit below)
 
 
 def axpy(a, x: SegmentedArray, y: SegmentedArray) -> SegmentedArray:
@@ -27,17 +27,11 @@ def axpy(a, x: SegmentedArray, y: SegmentedArray) -> SegmentedArray:
 
 
 def dot(x: SegmentedArray, y: SegmentedArray) -> jax.Array:
-    """Scalar product <x, y> (conjugating) with one psum across segments
-    (paper: 'scalar products of all data' in the CG loop)."""
-    ax = _axis_arg(x.mesh_axes)
-
-    def body(xl, yl):
-        part = jnp.vdot(xl, yl)
-        return lax.psum(part, ax)
-
-    return compat.shard_map(body, mesh=x.group.mesh,
-                            in_specs=(x.pspec, y.pspec), out_specs=P())(
-                                x.data, y.data)
+    """Scalar product <x, y> (conjugating) with one reduction across
+    segments (paper: 'scalar products of all data' in the CG loop) —
+    routed through the ``vdot`` comm verb."""
+    from .comm import vdot
+    return vdot(x, y)
 
 
 def norm2(x: SegmentedArray) -> jax.Array:

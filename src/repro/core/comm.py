@@ -18,6 +18,11 @@ per-device shard (pass the reduction ``axis`` name; ``axis=None`` means
 single-program execution and degenerates to the local math).  This is
 what lets whole algorithms — NLINV's Newton/CG loop — be written once
 against the verbs and launched either way.
+
+These module-level functions are the verb *implementations*; the stable
+public surface is the group-bound method set of ``env.Communicator``
+(and the fluent forms on ``SegmentedArray``), for which the re-exports
+in ``repro.core`` are deprecated shims.
 """
 
 from __future__ import annotations
@@ -33,7 +38,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import compat
 from .runtime import DeviceGroup, current_group
-from .segmented import Policy, SegmentedArray, gather, segment
+from .segmented import Policy, SegmentedArray, _pad_to, gather, segment
 
 # re-export container-level scatter/gather as comm verbs (Fig. 3 naming)
 scatter = segment
@@ -44,6 +49,8 @@ _REDUCERS = {
     "max": (lax.pmax, jnp.max),
     "min": (lax.pmin, jnp.min),
 }
+
+_ELEMWISE = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
 
 def broadcast(x, group: DeviceGroup | None = None) -> SegmentedArray:
@@ -71,10 +78,14 @@ def reduce(seg: SegmentedArray, op: str = "sum") -> jax.Array:
 
 
 def all_reduce(seg: SegmentedArray, op: str = "sum",
-               hierarchical: bool = False) -> SegmentedArray:
+               hierarchical: bool = False,
+               p2p: bool = False) -> SegmentedArray:
     """Like ``reduce`` but the result is CLONEd on every device
-    (the paper's Σ ρ_g block-wise all-reduce)."""
-    return all_reduce_window(seg, None, op=op, hierarchical=hierarchical)
+    (the paper's Σ ρ_g block-wise all-reduce).  ``p2p=True`` runs the
+    reduction as a ring of ``ppermute`` transfers instead of one psum —
+    the paper's explicit P2P schedule."""
+    return all_reduce_window(seg, None, op=op, hierarchical=hierarchical,
+                             p2p=p2p)
 
 
 def _window_index(ndim: int, window, axes=None) -> tuple:
@@ -91,6 +102,7 @@ def _window_index(ndim: int, window, axes=None) -> tuple:
 def all_reduce_window(x, window=None, *, op: str = "sum",
                       axis=None, reduce_dim: int | None = None,
                       hierarchical: bool = False, window_axes=None,
+                      p2p: bool = False,
                       group: DeviceGroup | None = None,
                       mesh_axes: Sequence[str] | None = None):
     """Windowed all-reduce — generalizes the paper's ``kern_all_red_p2p_2d``.
@@ -111,6 +123,10 @@ def all_reduce_window(x, window=None, *, op: str = "sum",
     axis to reduce over (``axis=None``: no collective — the single-device
     degenerate case).  ``hierarchical=True`` with ``group``/``mesh_axes``
     stages the window psum over ICI then DCN (paper's cross-IOH path).
+    ``p2p=True`` (with ``group``/``mesh_axes``) replaces the psum with a
+    ring of ``ppermute`` transfers — the paper's ``kern_all_red_p2p_2d``
+    explicit P2P schedule, numerically equivalent up to float summation
+    order (each rank accumulates its neighbours in ring order).
     """
     if isinstance(x, SegmentedArray):
         seg = x
@@ -123,7 +139,7 @@ def all_reduce_window(x, window=None, *, op: str = "sum",
         body = partial(_all_reduce_window_local, window=window, op=op,
                        axis=_axis_arg(maxes), reduce_dim=rdim,
                        hierarchical=hierarchical, window_axes=window_axes,
-                       group=seg.group, mesh_axes=maxes)
+                       p2p=p2p, group=seg.group, mesh_axes=maxes)
         out_spec = P(*[None] * (seg.data.ndim - 1))
         # check_vma=False: the windowed scatter-into-zeros defeats JAX's
         # replication inference even though the result is replicated.
@@ -134,19 +150,34 @@ def all_reduce_window(x, window=None, *, op: str = "sum",
     return _all_reduce_window_local(x, window=window, op=op, axis=axis,
                                     reduce_dim=reduce_dim,
                                     hierarchical=hierarchical,
-                                    window_axes=window_axes,
+                                    window_axes=window_axes, p2p=p2p,
                                     group=group, mesh_axes=mesh_axes)
 
 
 def _all_reduce_window_local(x, *, window, op, axis, reduce_dim,
-                             hierarchical, window_axes, group, mesh_axes):
+                             hierarchical, window_axes, group, mesh_axes,
+                             p2p=False):
     pcoll, jred = _REDUCERS[op]
+    if p2p and hierarchical:
+        raise ValueError("p2p and hierarchical are mutually exclusive "
+                         "reduction schedules")
+    if window is not None and op != "sum":
+        # the scatter-back fill is zeros, which is only the identity of +
+        raise NotImplementedError(
+            f"windowed all-reduce supports op='sum' only, got {op!r}")
     if reduce_dim is not None:
         x = jred(x, axis=reduce_dim)
 
     def psum_part(v):
         if axis is None:
             return v
+        if p2p:
+            if group is None or not mesh_axes:
+                raise ValueError("p2p=True needs group= and mesh_axes=")
+            if len(tuple(mesh_axes)) > 1:
+                raise ValueError("p2p ring reduction is single-axis")
+            return ring_allreduce(v, _axis_arg(tuple(mesh_axes)),
+                                  group.axis_size(*mesh_axes), op=op)
         if hierarchical and op == "sum" and group is not None and mesh_axes:
             return hierarchical_psum(v, group, mesh_axes)
         return pcoll(v, axis)
@@ -226,6 +257,114 @@ def hierarchical_psum(x: jax.Array, group: DeviceGroup,
     return x
 
 
+# ---------------------------------------------------------------------------
+# point-to-point verbs (the paper's P2P transfer path inside a PCIe domain;
+# on TPU: lax.ppermute over ICI neighbour links)
+# ---------------------------------------------------------------------------
+
+def ring_perm(nseg: int, offset: int = 1,
+              wrap: bool = True) -> list[tuple[int, int]]:
+    """(src, dst) pairs shifting every rank by ``offset`` around the ring.
+    ``wrap=False`` drops the wrap-around edges (their receivers get the
+    collective's zero fill) — the open-boundary form halo exchange uses."""
+    if wrap:
+        return [(i, (i + offset) % nseg) for i in range(nseg)]
+    return [(i, i + offset) for i in range(nseg) if 0 <= i + offset < nseg]
+
+
+def _p2p_eager(seg: SegmentedArray, perm) -> SegmentedArray:
+    bad = [p for p in perm if not all(0 <= r < seg.nseg for r in p)]
+    if bad:
+        raise ValueError(f"send_recv perm pairs {bad} out of range for a "
+                         f"{seg.nseg}-segment group")
+    ax = _axis_arg(seg.mesh_axes)
+    body = lambda xl: lax.ppermute(xl, ax, perm)
+    out = compat.shard_map(body, mesh=seg.group.mesh, in_specs=seg.pspec,
+                           out_specs=seg.pspec)(seg.data)
+    return seg.with_data(out)
+
+
+def send_recv(x, perm, *, axis=None):
+    """MPI_Sendrecv over segments: for every ``(src, dst)`` pair, rank
+    ``src``'s segment is shipped to rank ``dst``; ranks no pair sends to
+    receive zeros (``lax.ppermute`` semantics — the paper's P2P copy).
+
+    Eager form: ``x`` is a SegmentedArray — segments move between
+    devices, the container metadata is unchanged.  In-shard_map form:
+    ``x`` is the local shard and ``axis`` names the mesh axis.
+    ``axis=None`` is the single-program degenerate case: identity if
+    ``(0, 0)`` is in ``perm``, else zeros.
+    """
+    perm = [tuple(p) for p in perm]
+    if isinstance(x, SegmentedArray):
+        return _p2p_eager(x, perm)
+    if axis is None:
+        return x if (0, 0) in perm else jnp.zeros_like(x)
+    return lax.ppermute(x, axis, perm)
+
+
+def shift(x, offset: int = 1, *, wrap: bool = True, axis=None,
+          nseg: int | None = None):
+    """Ring shift: rank ``i``'s segment moves to rank ``i + offset``
+    (modulo the group size when ``wrap``; otherwise the edge ranks
+    receive zeros).  The canonical P2P pattern — halo exchange is two
+    ``shift``s with ``wrap=False``.
+
+    Eager form on a SegmentedArray; in-shard_map form needs ``axis`` and
+    ``nseg`` (the axis size, static).  ``axis=None``/``nseg=None`` is the
+    1-device degenerate case.
+    """
+    if isinstance(x, SegmentedArray):
+        return _p2p_eager(x, ring_perm(x.nseg, offset, wrap))
+    if nseg is None:
+        if axis is not None:
+            raise ValueError("in-shard_map shift needs nseg= (static axis size)")
+        nseg = 1
+    return send_recv(x, ring_perm(nseg, offset, wrap), axis=axis)
+
+
+def ring_allreduce(x: jax.Array, axis, nseg: int, op: str = "sum") -> jax.Array:
+    """All-reduce as ``nseg - 1`` ring ppermutes — the transfer schedule
+    of the paper's ``kern_all_red_p2p_2d``, built on the p2p verb layer.
+    Call inside a shard_map body.  Equivalent to the psum up to float
+    summation order (ranks accumulate neighbours in ring order, so
+    replicas may differ in the last ulp)."""
+    jop = _ELEMWISE[op]
+    perm = ring_perm(nseg, 1, wrap=True)
+    acc = buf = x
+    for _ in range(nseg - 1):
+        buf = lax.ppermute(buf, axis, perm)
+        acc = jop(acc, buf)
+    return acc
+
+
+def all_gather(x, *, dim: int | None = None, axis=None, tiled: bool = True):
+    """MPI_Allgather: every device ends up with the whole logical array.
+
+    Eager form: SegmentedArray -> CLONE container of the logical array
+    (gather + bcast collapsed into one resharding collective; padding is
+    stripped and block-cyclic order undone like ``gather``).  The gather
+    dim is the container's own segmented dim — passing a different
+    ``dim`` is an error.
+    In-shard_map form: ``lax.all_gather`` of the local shard along
+    ``dim`` (default 0); ``axis=None`` degenerates to the identity.
+    """
+    if isinstance(x, SegmentedArray):
+        seg = x
+        if dim is not None and dim != seg.dim:
+            raise ValueError(f"eager all_gather concatenates the container's "
+                             f"segmented dim ({seg.dim}); got dim={dim}")
+        full = gather(seg)          # already replicated over the group
+        return SegmentedArray(full, seg.group, Policy.CLONE, seg.dim,
+                              seg.mesh_axes,
+                              orig_len=full.shape[seg.dim] if full.ndim
+                              else None)
+    if axis is None:
+        return x
+    return lax.all_gather(x, axis, axis=0 if dim is None else dim,
+                          tiled=tiled)
+
+
 def copy(src: SegmentedArray, *, policy: Policy | None = None,
          dim: int | None = None,
          mesh_axes: tuple[str, ...] | None = None,
@@ -271,22 +410,37 @@ def copy(src: SegmentedArray, *, policy: Policy | None = None,
 def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
     """Re-segment from ``seg.dim`` to ``new_dim`` with an all-to-all
     (MPI_Alltoall — the natural extension of the paper's verb set; used
-    for MoE dispatch and FFT transposes)."""
+    for MoE dispatch and FFT transposes).
+
+    The segmentation metadata is rebuilt for the post-transpose layout:
+    ``new_dim`` is padded so it tiles across the group and its
+    pre-padding length becomes the new ``orig_len``; the old segmented
+    dim's padding (now unsegmented) is sliced away so the container stays
+    truthful about its logical extent.
+    """
+    if seg.policy is not Policy.NATURAL:
+        raise ValueError(f"all_to_all requires a NATURAL container, "
+                         f"got {seg.policy}")
+    if new_dim == seg.dim:
+        return seg
     ax = _axis_arg(seg.mesh_axes)
+    data, new_orig = _pad_to(seg.data, new_dim, seg.nseg)
 
     def body(x):
         return lax.all_to_all(x, ax, split_axis=new_dim, concat_axis=seg.dim,
                               tiled=True)
 
-    in_spec = seg.pspec
-    out = list([None] * seg.data.ndim)
+    out = [None] * data.ndim
     out[new_dim] = ax
-    out_spec = P(*out)
     data = compat.shard_map(body, mesh=seg.group.mesh,
-                            in_specs=in_spec, out_specs=out_spec)(seg.data)
+                            in_specs=seg.pspec, out_specs=P(*out))(data)
+    if seg.orig_len is not None and seg.orig_len != data.shape[seg.dim]:
+        # old-dim padding sits at the global tail; it is local to every
+        # shard after the transpose, so the slice needs no communication.
+        data = lax.slice_in_dim(data, 0, seg.orig_len, axis=seg.dim)
     import dataclasses
     return dataclasses.replace(seg, data=data, dim=new_dim,
-                               orig_len=data.shape[new_dim])
+                               orig_len=new_orig)
 
 
 def reduce_scatter(seg: SegmentedArray, op: str = "sum") -> SegmentedArray:

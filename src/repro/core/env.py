@@ -1,0 +1,320 @@
+"""First-class environment / communicator API (paper §2.1, §2.3).
+
+An MGPU program begins by instantiating an ``environment`` that detects
+the devices in the system, restricts work to a ``dev_group``, and then
+calls MPI-like communication *methods bound to that group* (Fig. 3).
+This module is that design as the library's stable object surface:
+
+  ``Environment``    device discovery, ICI/DCN topology classification
+                     (the PCIe-domain / IOH-boundary analogue) and
+                     submesh selection — every ``Communicator`` is
+                     minted here;
+  ``Communicator``   a group-bound object exposing the full MPI-like
+                     verb set as methods — collectives (``bcast`` /
+                     ``scatter`` / ``gather`` / ``allgather`` /
+                     ``reduce`` / ``allreduce`` / ``allreduce_window`` /
+                     ``reduce_scatter`` / ``alltoall`` / ``vdot``),
+                     point-to-point (``send_recv`` / ``shift``,
+                     ``lax.ppermute`` — the paper's P2P path),
+                     synchronization (``barrier`` / ``fence``), the
+                     container constructor (``container``, §2.2) and the
+                     kernel launchers (``invoke`` / ``invoke_all`` /
+                     ``spmd``, §2.5).
+
+Every reduction verb keeps the library's dual calling forms: eagerly on
+a :class:`SegmentedArray`, or inside a shard_map body on the local shard
+(pass ``axis=comm.axis``; ``axis=None`` degenerates to the local math).
+The free functions in ``core.comm`` / ``core.segmented`` /
+``core.invoke`` remain only as deprecated shims; algorithm code programs
+against these two classes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from . import comm as _comm
+from . import compat
+from . import invoke as _invoke
+from . import segmented as _segmented
+from . import sync as _sync
+from .runtime import DCN_AXES, DeviceGroup
+from .segmented import Policy, SegmentedArray
+
+
+class Environment:
+    """Device discovery + topology classification (MGPU ``environment``).
+
+    Detects the addressable devices (or wraps an explicit subset) and
+    mints :class:`Communicator` objects over submeshes of them — the
+    paper's ``dev_group`` constructor argument.  Axis names listed in
+    ``DCN_AXES`` cross the data-center network (the paper's cross-IOH
+    boundary); everything else is ICI.
+    """
+
+    def __init__(self, devices: Sequence[jax.Device] | None = None):
+        self.devices = tuple(jax.devices() if devices is None else devices)
+
+    @property
+    def ndev(self) -> int:
+        return len(self.devices)
+
+    @property
+    def platform(self) -> str:
+        return self.devices[0].platform
+
+    @property
+    def dcn_axes(self) -> tuple[str, ...]:
+        """Axis names classified as DCN (slow, inter-pod) when used."""
+        return tuple(DCN_AXES)
+
+    def __repr__(self) -> str:
+        return f"Environment({self.ndev}x {self.platform})"
+
+    # -- communicator constructors (MGPU dev_group selection) -------------
+    def group(self, shape: Sequence[int] | int | None = None,
+              axes: Sequence[str] = ("data",)) -> "Communicator":
+        """Communicator over the first ``prod(shape)`` devices arranged as
+        a named-axis mesh (default: all devices on one ``data`` axis)."""
+        if shape is None:
+            shape = (self.ndev,)
+        if isinstance(shape, int):
+            shape = (shape,)
+        shape = tuple(shape)
+        n = math.prod(shape)
+        if n > self.ndev:
+            raise ValueError(
+                f"mesh shape {shape} needs {n} devices, environment has "
+                f"{self.ndev} (simulate more with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        mesh = compat.make_mesh(shape, tuple(axes),
+                                devices=self.devices[:n])
+        return Communicator(DeviceGroup(mesh))
+
+    def subgroup(self, n: int, axes: Sequence[str] = ("data",)) -> "Communicator":
+        """Restrict to the first ``n`` devices (MGPU ``dev_group`` ctor)."""
+        return self.group((n,), axes)
+
+    @property
+    def world(self) -> "Communicator":
+        """Communicator over every device (MPI_COMM_WORLD analogue)."""
+        return self.group()
+
+    def from_mesh(self, mesh: Mesh) -> "Communicator":
+        """Wrap an existing named-axis mesh."""
+        return Communicator(DeviceGroup(mesh))
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """Group-bound MPI-like verbs (the paper's communication methods).
+
+    ``mesh_axes`` selects which axes of the group the verbs communicate
+    over (default: all of them); containers built by this communicator
+    are segmented along those axes.
+    """
+
+    group: DeviceGroup
+    mesh_axes: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if not self.mesh_axes:
+            object.__setattr__(self, "mesh_axes",
+                               tuple(self.group.axis_names))
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def mesh(self) -> Mesh:
+        return self.group.mesh
+
+    @property
+    def size(self) -> int:
+        """Number of communicating segments (product of ``mesh_axes``)."""
+        return self.group.axis_size(*self.mesh_axes)
+
+    @property
+    def ndev(self) -> int:
+        return self.group.ndev
+
+    @property
+    def axis(self):
+        """The in-shard_map reduction-axis argument for this communicator
+        (a single axis name, or the tuple for multi-axis groups)."""
+        return (self.mesh_axes if len(self.mesh_axes) > 1
+                else self.mesh_axes[0])
+
+    @property
+    def ici_axes(self) -> tuple[str, ...]:
+        return self.group.ici_axes
+
+    @property
+    def dcn_axes(self) -> tuple[str, ...]:
+        return self.group.dcn_axes
+
+    def __repr__(self) -> str:
+        return (f"Communicator(size={self.size}, axes={self.mesh_axes}, "
+                f"mesh={dict(self.group.shape)})")
+
+    # -- containers (paper §2.2: the ctor controls the split) -------------
+    def container(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
+                  block: int | None = None, halo: int = 0) -> SegmentedArray:
+        """Build a segmented container on this communicator's group."""
+        return _segmented.segment(x, self.group, policy=policy, dim=dim,
+                                  mesh_axes=self.mesh_axes, block=block,
+                                  halo=halo)
+
+    # -- collectives (paper §2.3, Fig. 3) ---------------------------------
+    def bcast(self, x) -> SegmentedArray:
+        """Replicate a local array on every device (-> CLONE container)."""
+        return self.container(x, policy=Policy.CLONE)
+
+    def scatter(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
+                block: int | None = None, halo: int = 0) -> SegmentedArray:
+        """Split a local array across the group (Fig. 3 ``scatter`` — the
+        container ctor with an explicit policy)."""
+        return self.container(x, policy=policy, dim=dim, block=block,
+                              halo=halo)
+
+    def gather(self, seg: SegmentedArray) -> jax.Array:
+        """Materialize the logical array of a container (Fig. 3)."""
+        return _segmented.gather(seg)
+
+    def _check_local_axis(self, axis, verb: str):
+        """In-shard_map forms on a multi-device communicator must name
+        the axis — a silent degenerate (local-math) fallback would drop
+        the collective (the sibling free functions keep ``axis=None`` as
+        the documented single-device degenerate form)."""
+        if axis is None and self.size > 1:
+            raise ValueError(
+                f"in-shard_map {verb} on a multi-device communicator "
+                f"needs axis= (e.g. comm.axis)")
+
+    def allgather(self, x, *, dim: int | None = None, axis=None):
+        """MPI_Allgather: the whole logical array on every device.  Eager
+        on a container (-> CLONE, along its own segmented dim), or
+        in-shard_map on the local shard (gathers along ``dim``)."""
+        if not isinstance(x, SegmentedArray):
+            self._check_local_axis(axis, "allgather")
+        return _comm.all_gather(x, dim=dim, axis=axis)
+
+    def reduce(self, seg: SegmentedArray, op: str = "sum") -> jax.Array:
+        """Merge the segments elementwise into one local array (Fig. 3)."""
+        return _comm.reduce(seg, op)
+
+    def allreduce(self, x, op: str = "sum", *, hierarchical: bool = False,
+                  p2p: bool = False, axis=None):
+        """Reduce + replicate (the paper's Σ ρ_g).  Eager on a container,
+        or in-shard_map on the local shard with ``axis=self.axis``."""
+        if isinstance(x, SegmentedArray):
+            return _comm.all_reduce(x, op, hierarchical=hierarchical,
+                                    p2p=p2p)
+        self._check_local_axis(axis, "allreduce")
+        return _comm.all_reduce_window(x, None, op=op, axis=axis,
+                                       hierarchical=hierarchical, p2p=p2p,
+                                       group=self.group,
+                                       mesh_axes=self.mesh_axes)
+
+    def allreduce_window(self, x, window=None, *, op: str = "sum",
+                         axis=None, reduce_dim: int | None = None,
+                         hierarchical: bool = False, window_axes=None,
+                         p2p: bool = False):
+        """Windowed all-reduce (the paper's ``kern_all_red_p2p_2d`` as a
+        primitive); see ``core.comm.all_reduce_window``.  The group and
+        mesh axes are bound by this communicator."""
+        if not isinstance(x, SegmentedArray):
+            self._check_local_axis(axis, "allreduce_window")
+        return _comm.all_reduce_window(x, window, op=op, axis=axis,
+                                       reduce_dim=reduce_dim,
+                                       hierarchical=hierarchical,
+                                       window_axes=window_axes, p2p=p2p,
+                                       group=self.group,
+                                       mesh_axes=self.mesh_axes)
+
+    def reduce_scatter(self, seg: SegmentedArray,
+                       op: str = "sum") -> SegmentedArray:
+        """MPI_Reduce_scatter: reduce segments, result left segmented."""
+        return _comm.reduce_scatter(seg, op)
+
+    def alltoall(self, seg: SegmentedArray, new_dim: int) -> SegmentedArray:
+        """MPI_Alltoall: re-segment a container onto another dim."""
+        return _comm.all_to_all(seg, new_dim)
+
+    def vdot(self, x, y, *, axis=None, policies=None):
+        """Segmented inner product over mixed CLONE/NATURAL pytrees (the
+        CG 'scalar products of all data' of paper Table 1)."""
+        leaves = jax.tree.leaves(
+            x, is_leaf=lambda l: isinstance(l, SegmentedArray))
+        if not all(isinstance(l, SegmentedArray) for l in leaves):
+            self._check_local_axis(axis, "vdot")
+        return _comm.vdot(x, y, axis=axis, policies=policies)
+
+    def copy(self, seg: SegmentedArray, *, policy: Policy | None = None,
+             **kw) -> SegmentedArray:
+        """Segmented-to-segmented copy / re-segmentation (Fig. 3)."""
+        return _comm.copy(seg, policy=policy, **kw)
+
+    # -- point-to-point (the paper's P2P transfer path) -------------------
+    def send_recv(self, x, perm, *, axis=None):
+        """Pairwise segment exchange: ship rank ``src``'s segment to rank
+        ``dst`` for every ``(src, dst)`` pair (``lax.ppermute``)."""
+        if not isinstance(x, SegmentedArray):
+            self._check_local_axis(axis, "send_recv")
+        return _comm.send_recv(x, perm, axis=axis)
+
+    def shift(self, x, offset: int = 1, *, wrap: bool = True, axis=None):
+        """Ring shift by ``offset`` (``wrap=False``: edges get zeros).
+        In-shard_map form: pass ``axis`` (e.g. ``comm.axis``); the ring
+        size is that axis's extent."""
+        if isinstance(x, SegmentedArray):
+            return _comm.shift(x, offset, wrap=wrap)
+        if axis is None:
+            if self.size > 1:
+                raise ValueError(
+                    "in-shard_map shift on a multi-device communicator "
+                    "needs axis= (e.g. comm.axis)")
+            nseg = 1
+        else:
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            nseg = self.group.axis_size(*axes)
+        return _comm.shift(x, offset, wrap=wrap, axis=axis, nseg=nseg)
+
+    # -- synchronization (paper §2.5) -------------------------------------
+    def barrier(self) -> None:
+        """All devices of the group reach this point."""
+        _sync.barrier(self.group)
+
+    def fence(self, *arrays):
+        """Host-block until the given arrays are computed."""
+        return _sync.fence(*arrays)
+
+    def barrier_fence(self, *arrays):
+        """Fence, then barrier — the paper's strongest primitive."""
+        return _sync.barrier_fence(*arrays, group=self.group)
+
+    # -- kernel launch (paper §2.5) ---------------------------------------
+    def invoke(self, fn: Callable, *args, rank: int, **kw):
+        """Launch ``fn`` in the context of one device of the group."""
+        kw.setdefault("mesh_axes", self.mesh_axes)
+        return _invoke.invoke_kernel(fn, *args, rank=rank, group=self.group,
+                                     **kw)
+
+    def invoke_all(self, fn: Callable, *args, **kw):
+        """Launch ``fn`` on every device; segmented args arrive as local
+        ranges, plain arrays are broadcast."""
+        kw.setdefault("mesh_axes", self.mesh_axes)
+        return _invoke.invoke_kernel_all(fn, *args, group=self.group, **kw)
+
+    def spmd(self, fn: Callable, *, in_policies, out_policies,
+             check_vma: bool = True, donate_argnums=(), jit: bool = True):
+        """Compile an SPMD program from segmentation policies — the one
+        launch point algorithms use (no specs, no shard_map)."""
+        return _invoke.make_spmd(fn, self.group, in_policies=in_policies,
+                                 out_policies=out_policies,
+                                 mesh_axes=self.mesh_axes,
+                                 check_vma=check_vma,
+                                 donate_argnums=donate_argnums, jit=jit)

@@ -11,9 +11,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from . import compat
 from .segmented import SegmentedArray
 
 
@@ -30,11 +28,10 @@ def _fft2_local(x: jax.Array, inverse: bool, centered: bool) -> jax.Array:
 
 def fft2_batched(x: SegmentedArray, inverse: bool = False,
                  centered: bool = False) -> SegmentedArray:
-    """Batched 2-D FFT over a batch-segmented container (no comm)."""
-    body = lambda xl: _fft2_local(xl, inverse, centered)
-    out = compat.shard_map(body, mesh=x.group.mesh,
-                           in_specs=x.pspec, out_specs=x.pspec)(x.data)
-    return x.with_data(out)
+    """Batched 2-D FFT over a batch-segmented container (no comm) —
+    launched through the container's ``invoke`` (paper §2.5: segmented
+    libraries are kernels over local ranges)."""
+    return x.invoke(lambda xl: _fft2_local(xl, inverse, centered))
 
 
 def fft2(x: jax.Array, inverse: bool = False, centered: bool = False) -> jax.Array:

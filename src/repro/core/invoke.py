@@ -7,6 +7,10 @@ needs the entire vector for peer-to-peer access.  The SPMD analogue:
 arrives as its local shard; ``PassThrough`` materializes the full array
 (the TPU equivalent of P2P visibility is an all-gather); ``dev_rank``
 is ``lax.axis_index``.
+
+Every ``group=`` parameter accepts a ``DeviceGroup`` or an
+``env.Communicator`` (whose group is unwrapped); the method forms
+``Communicator.invoke``/``invoke_all``/``spmd`` are the stable surface.
 """
 
 from __future__ import annotations
@@ -125,9 +129,11 @@ def make_spmd(fn: Callable, group: DeviceGroup | None = None, *,
     ``in_policies`` is one pytree per positional argument and
     ``out_policies`` one for the result; leaves are ``Policy`` members or
     ``(Policy, dim)`` pairs (``Policy`` alone segments dim 0).  The body
-    sees local shards and may call the comm verbs' in-shard_map forms.
-    Downstream layers never construct a PartitionSpec or touch shard_map:
-    this is the single launch point the container layer exposes.
+    sees local shards and may call the verbs' in-shard_map forms
+    (``Communicator.allreduce_window`` etc.).  Downstream layers never
+    construct a PartitionSpec or touch shard_map: ``Communicator.spmd``
+    is the single launch point the container layer exposes (this free
+    function is its deprecated-shim engine).
 
     A 1-device group is the degenerate case — same program, the
     collectives are no-ops — which is how single- and multi-device

@@ -107,10 +107,19 @@ class DeviceGroup:
         return self._ctx.__exit__(*exc)
 
 
-def current_group(group: DeviceGroup | None = None) -> DeviceGroup:
-    """Default-group resolution: explicit arg > ambient mesh > all devices."""
+def current_group(group=None) -> DeviceGroup:
+    """Default-group resolution: explicit arg > ambient mesh > all devices.
+
+    .. deprecated:: PR 2
+        The implicit-global-group idiom is deprecated.  Hold an
+        ``env.Communicator`` (whose group is always explicit) instead.
+        This resolver remains as the engine of the free-function shims.
+
+    ``group`` may be a ``DeviceGroup`` or anything carrying one under a
+    ``.group`` attribute (an ``env.Communicator``).
+    """
     if group is not None:
-        return group
+        return getattr(group, "group", group)
     mesh = compat.ambient_mesh()  # inside a `with mesh:` scope
     if mesh is not None:
         return DeviceGroup(mesh)

@@ -78,17 +78,59 @@ class SegmentedArray:
     def sharding(self) -> NamedSharding:
         return self.group.sharding(self.pspec)
 
-    def seg_len(self) -> int:
-        """Per-segment length along the segmented dim."""
+    def seg_len(self, rank: int | None = None) -> int:
+        """Per-segment length along the segmented dim.
+
+        Without ``rank``: the uniform *physical* shard length (padding
+        included).  With ``rank``: the *logical* length of that segment —
+        block-cyclic remainders (BLOCK) and halo rows (OVERLAP2D)
+        included, matching what MGPU's (pointer, size) metadata reports.
+        """
+        if rank is not None:
+            return self._seg_sizes()[rank]
+        if self.policy is Policy.CLONE:
+            return self.data.shape[self.dim]
         return self.data.shape[self.dim] // self.nseg
 
-    def segments(self) -> list[tuple[int, ...]]:
-        """MGPU's (pointer, size) tuple vector — here, per-segment shapes."""
+    def _seg_sizes(self) -> list[int]:
+        """Logical per-segment lengths along the segmented dim."""
+        n = self.nseg
+        total = self.data.shape[self.dim]
+        orig = total if self.orig_len is None else self.orig_len
         if self.policy is Policy.CLONE:
-            return [self.global_shape] * self.group.ndev
-        s = list(self.global_shape)
-        s[self.dim] = self.seg_len()
-        return [tuple(s)] * self.nseg
+            return [orig] * n
+        if self.policy is Policy.BLOCK:
+            # rank r owns blocks r, r+n, r+2n, ... of the padded sequence;
+            # count only the elements below the pre-padding length.
+            nblocks = total // self.block
+            return [sum(max(0, min(orig - b * self.block, self.block))
+                        for b in range(r, nblocks, n)) for r in range(n)]
+        per = total // n                      # padded contiguous rows
+        sizes = [max(0, min(orig - r * per, per)) for r in range(n)]
+        if self.policy is Policy.OVERLAP2D and self.halo:
+            # each segment additionally holds ``halo`` rows per existing
+            # neighbour (edge segments have only one neighbour).
+            h = self.halo
+            sizes = [s + (h if r > 0 else 0) + (h if r < n - 1 else 0)
+                     for r, s in enumerate(sizes)]
+        return sizes
+
+    def segments(self) -> list[tuple[int, ...]]:
+        """MGPU's (pointer, size) tuple vector — here, per-segment shapes.
+
+        Shapes are *logical*: BLOCK reports the block-cyclic remainder
+        split and OVERLAP2D includes the halo rows exchanged with each
+        existing neighbour.  One entry per segment (``nseg``) for every
+        policy, CLONE included.
+        """
+        if self.policy is Policy.CLONE:
+            return [self.global_shape] * self.nseg
+        out = []
+        for sz in self._seg_sizes():
+            s = list(self.global_shape)
+            s[self.dim] = sz
+            out.append(tuple(s))
+        return out
 
     # -- rewrap helpers ---------------------------------------------------
     def with_data(self, data: jax.Array) -> "SegmentedArray":
@@ -107,6 +149,83 @@ class SegmentedArray:
 
     def astype(self, dt) -> "SegmentedArray":
         return self.with_data(self.data.astype(dt))
+
+    # -- fluent verb surface (delegates to the owning communicator) -------
+    # MGPU containers are arguments *to* communication methods bound to a
+    # dev_group (paper Fig. 3); the fluent forms here resolve the owning
+    # Communicator from the container's own group so algorithm code never
+    # re-derives it.  Imports are deferred: comm/env import this module.
+    @property
+    def comm(self):
+        """The owning :class:`repro.core.env.Communicator`."""
+        from .env import Communicator
+        return Communicator(self.group, self.mesh_axes)
+
+    def to(self, policy: "Policy | None" = None, **kw) -> "SegmentedArray":
+        """Re-segment under a new policy/dim (``comm.copy``), e.g.
+        ``x.to(Policy.CLONE)``."""
+        from .comm import copy
+        return copy(self, policy=policy, **kw)
+
+    def gather(self) -> jax.Array:
+        """Materialize the logical array (inverse of construction)."""
+        return gather(self)
+
+    def reduce(self, op: str = "sum") -> jax.Array:
+        from .comm import reduce
+        return reduce(self, op)
+
+    def allreduce(self, op: str = "sum", *, hierarchical: bool = False,
+                  p2p: bool = False) -> "SegmentedArray":
+        from .comm import all_reduce
+        return all_reduce(self, op, hierarchical=hierarchical, p2p=p2p)
+
+    def allreduce_window(self, window=None, **kw) -> "SegmentedArray":
+        from .comm import all_reduce_window
+        return all_reduce_window(self, window, **kw)
+
+    def allgather(self) -> "SegmentedArray":
+        from .comm import all_gather
+        return all_gather(self)
+
+    def reduce_scatter(self, op: str = "sum") -> "SegmentedArray":
+        from .comm import reduce_scatter
+        return reduce_scatter(self, op)
+
+    def alltoall(self, new_dim: int) -> "SegmentedArray":
+        from .comm import all_to_all
+        return all_to_all(self, new_dim)
+
+    def vdot(self, other):
+        from .comm import vdot
+        return vdot(self, other)
+
+    def shift(self, offset: int = 1, *, wrap: bool = True) -> "SegmentedArray":
+        from .comm import shift
+        return shift(self, offset, wrap=wrap)
+
+    def send_recv(self, perm) -> "SegmentedArray":
+        from .comm import send_recv
+        return send_recv(self, perm)
+
+    def halo_exchange(self, fn: "Callable | None" = None) -> "SegmentedArray":
+        """OVERLAP2D halo exchange over the p2p path.  With ``fn``: apply
+        it to every halo-extended block (``(rows + 2h, ...) -> (rows,
+        ...)``).  Without: return the halo-extended container itself
+        (each segment physically carries its neighbours' rows, the
+        paper's overlapped splitting of Fig. 1)."""
+        return overlap2d_map(self, fn)
+
+    def invoke(self, fn: Callable, *args) -> "SegmentedArray":
+        """Launch a shape-preserving kernel over this container's group
+        with the local segment as first argument (``invoke_kernel_all``);
+        the result inherits this container's segmentation."""
+        from .invoke import invoke_kernel_all
+        res = invoke_kernel_all(fn, self, *args, group=self.group,
+                                out_specs=self.pspec,
+                                mesh_axes=self.mesh_axes)
+        return self.with_data(res.data if isinstance(res, SegmentedArray)
+                              else res)
 
 
 jax.tree_util.register_pytree_node(
@@ -195,13 +314,20 @@ def gather(seg: SegmentedArray) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def overlap2d_map(seg: SegmentedArray,
-                  fn: Callable[[jax.Array], jax.Array]) -> SegmentedArray:
-    """Apply ``fn`` to each local row-block extended by ``halo`` rows from
-    its neighbours (zero-padded at the edges).  ``fn`` must map shape
-    ``(rows + 2h, ...)`` -> ``(rows, ...)``.
+                  fn: Callable[[jax.Array], jax.Array] | None) -> SegmentedArray:
+    """Halo exchange + map over an OVERLAP2D container.
+
+    Each local row-block is extended by ``halo`` rows from its
+    neighbours through the p2p path (two open-boundary ring ``shift``s —
+    ``lax.ppermute``, the paper's P2P transfer; edge shards see zeros)
+    and ``fn`` is applied to the extended block (``(rows + 2h, ...) ->
+    (rows, ...)``).  ``fn=None`` returns the halo-extended container
+    itself: a NATURAL container whose segments are the ``rows + 2h``
+    blocks (MGPU's physically overlapped segments, Fig. 1).
     """
     if seg.policy is not Policy.OVERLAP2D:
         raise ValueError("overlap2d_map requires an OVERLAP2D container")
+    from .comm import shift  # deferred: comm imports this module
     h = seg.halo
     axis = seg.mesh_axes[0]
     mesh = seg.group.mesh
@@ -210,20 +336,20 @@ def overlap2d_map(seg: SegmentedArray,
     def body(x):
         # x: local block, segmented dim first for simplicity of slicing
         xm = jnp.moveaxis(x, seg.dim, 0)
-        lo = xm[:h]          # rows this shard sends downward
-        hi = xm[-h:]         # rows this shard sends upward
-        fwd = [(i, (i + 1) % n) for i in range(n)]
-        bwd = [(i, (i - 1) % n) for i in range(n)]
-        from_prev = jax.lax.ppermute(hi, axis, fwd)   # prev shard's top rows
-        from_next = jax.lax.ppermute(lo, axis, bwd)   # next shard's bottom rows
-        idx = jax.lax.axis_index(axis)
-        from_prev = jnp.where(idx == 0, jnp.zeros_like(from_prev), from_prev)
-        from_next = jnp.where(idx == n - 1, jnp.zeros_like(from_next), from_next)
-        ext = jnp.concatenate([from_prev, xm, from_next], axis=0)
-        out = fn(jnp.moveaxis(ext, 0, seg.dim))
-        return out
+        if h:
+            # halo exchange == two open-boundary ring shifts: the top
+            # rows travel up (+1), the bottom rows travel down (-1);
+            # wrap=False zero-fills the edge shards.
+            from_prev = shift(xm[-h:], +1, wrap=False, axis=axis, nseg=n)
+            from_next = shift(xm[:h], -1, wrap=False, axis=axis, nseg=n)
+            xm = jnp.concatenate([from_prev, xm, from_next], axis=0)
+        ext = jnp.moveaxis(xm, 0, seg.dim)
+        return ext if fn is None else fn(ext)
 
     spec = seg.pspec
     out = compat.shard_map(body, mesh=mesh, in_specs=spec,
                            out_specs=spec)(seg.data)
+    if fn is None:
+        return SegmentedArray(out, seg.group, Policy.NATURAL, seg.dim,
+                              seg.mesh_axes, orig_len=out.shape[seg.dim])
     return seg.with_data(out)

@@ -11,6 +11,10 @@ async by default (dispatch returns futures); the adaptation is:
   ordered(x, dep)    in-graph ordering: make ``x`` depend on ``dep``
                      without numerical effect (optimization_barrier), the
                      jit-compatible fence used to sequence collectives.
+
+``group=`` accepts a ``DeviceGroup`` or an ``env.Communicator``; the
+bound forms ``Communicator.barrier``/``fence``/``barrier_fence`` are the
+stable surface (``barrier``/``barrier_fence`` here are their shims).
 """
 
 from __future__ import annotations

@@ -1,8 +1,9 @@
 """Conjugate gradient on the (rho, chat) pytree (inner solver of eq. 3).
 
 lax.while_loop with max-iteration + relative-residual stopping; all
-scalar products go through ``dot`` so the distributed path can psum them
-(the paper's 'scalar products of all data' CG entry in Table 1).
+scalar products go through ``dot`` so the distributed path can reduce
+them through the bound ``Communicator.vdot`` (the paper's 'scalar
+products of all data' CG entry in Table 1).
 """
 
 from __future__ import annotations

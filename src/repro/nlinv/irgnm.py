@@ -8,9 +8,9 @@ regularization — the reason movie frames cannot be pipelined, §3.2).
 
 The two cross-device reduction points are injected: ``channel_sum`` (the
 Σ_j in DG^H) and ``dot`` (the CG scalar products).  The defaults are the
-local single-program math; ``recon.Reconstructor`` passes the repro.core
-verbs (``comm.all_reduce_window`` / ``comm.vdot``), which is the only
-way device communication ever enters this solver.
+local single-program math; ``recon.Reconstructor`` passes its bound
+``Communicator``'s verbs (``comm.allreduce_window`` / ``comm.vdot``),
+which is the only way device communication ever enters this solver.
 """
 
 from __future__ import annotations

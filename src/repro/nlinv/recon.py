@@ -1,14 +1,16 @@
-"""Reconstruction drivers, built entirely on the repro.core container /
-verb layer (the paper's §3.2 decomposition as policies, not specs).
+"""Reconstruction drivers, built entirely on the repro.core
+Environment/Communicator layer (the paper's §3.2 decomposition as
+policies and group-bound verbs, not specs).
 
 Coil data ``y`` and the coil coefficients ``chat`` are NATURAL-segmented
-across the device group, the image ``rho`` and acquisition geometry are
-CLONEd, the channel sum in DG^H is ``comm.all_reduce_window`` (the
-paper's ``kern_all_red_p2p_2d`` 4x-fewer-bytes trick when windowed to
-the centered FOV quarter), and the CG scalar products are ``comm.vdot``
-over the CLONE+NATURAL mixed pytree.  ``Reconstructor`` is the one
-frame-solver API; a ``DeviceGroup`` of size 1 is the degenerate case —
-the same program with no-op collectives.
+across the communicator's group, the image ``rho`` and acquisition
+geometry are CLONEd, the channel sum in DG^H is
+``comm.allreduce_window`` (the paper's ``kern_all_red_p2p_2d``
+4x-fewer-bytes trick when windowed to the centered FOV quarter), and the
+CG scalar products are ``comm.vdot`` over the CLONE+NATURAL mixed
+pytree.  ``Reconstructor`` is the one frame-solver API; a 1-device
+``Communicator`` is the degenerate case — the same program with no-op
+collectives.
 
 ``channel_sum`` strategy:
 
@@ -26,8 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import comm
-from ..core.invoke import make_spmd
+from ..core.env import Communicator, Environment
 from ..core.runtime import DeviceGroup
 from ..core.segmented import Policy
 from .irgnm import irgnm
@@ -37,8 +38,23 @@ from .operators import make_ops, sobolev_weight, uinit
 U_POLICIES = {"rho": Policy.CLONE, "chat": Policy.NATURAL}
 
 
+def _as_communicator(comm, axis: str) -> Communicator:
+    """Normalize comm=None | DeviceGroup | Communicator to a Communicator.
+
+    A bare DeviceGroup is bound to ``axis`` (the coil-split axis), so
+    multi-axis groups keep splitting coils over that one axis; an
+    explicit Communicator carries its own mesh_axes and wins over
+    ``axis``.
+    """
+    if comm is None:
+        return Environment().subgroup(1, (axis,))
+    if isinstance(comm, DeviceGroup):
+        return Communicator(comm, (axis,))
+    return comm
+
+
 class Reconstructor:
-    """One NLINV frame solver over a DeviceGroup.
+    """One NLINV frame solver over a Communicator.
 
     The compiled function (``.fn``) maps
     ``(y, mask, fov, weight, x0, x_ref) -> (u, image)`` with ``y``/
@@ -48,19 +64,22 @@ class Reconstructor:
     steady-state path.
     """
 
-    def __init__(self, group: DeviceGroup | None = None, axis: str = "data",
-                 *, newton: int = 7, cg_iters: int = 30,
+    def __init__(self, comm: Communicator | DeviceGroup | None = None,
+                 axis: str = "data", *, newton: int = 7, cg_iters: int = 30,
                  channel_sum: str = "crop", hierarchical: bool = False):
         if channel_sum not in ("full", "crop"):
             raise ValueError(f"channel_sum must be full|crop: {channel_sum}")
-        if group is None:
-            group = DeviceGroup.subset(1, (axis,))
-        self.group, self.axis = group, axis
+        self.comm = _as_communicator(comm, axis)
+        self.axis = self.comm.axis
         self.newton, self.cg_iters = newton, cg_iters
         self.channel_sum, self.hierarchical = channel_sum, hierarchical
         self._compiled: dict[bool, object] = {}
 
-    # -- the shard-local frame program (pure jnp + core verbs) ------------
+    @property
+    def group(self) -> DeviceGroup:
+        return self.comm.group
+
+    # -- the shard-local frame program (pure jnp + communicator verbs) ----
     def _frame(self, y, mask, fov, weight, x0, x_ref):
         crop = self.channel_sum == "crop"
 
@@ -68,31 +87,30 @@ class Reconstructor:
             g = prod.shape[-1]
             q = g // 4
             win = ((q, 3 * q), (q, 3 * q)) if crop else None
-            return comm.all_reduce_window(
+            return self.comm.allreduce_window(
                 prod, win, axis=self.axis, reduce_dim=0,
-                hierarchical=self.hierarchical, group=self.group,
-                mesh_axes=(self.axis,))
+                hierarchical=self.hierarchical)
 
         def dot(a, b):
-            return comm.vdot(a, b, axis=self.axis, policies=U_POLICIES)
+            return self.comm.vdot(a, b, axis=self.axis, policies=U_POLICIES)
 
         ops = make_ops(mask, fov, weight)
         u = irgnm(ops, y, x0, x_ref, newton=self.newton,
                   cg_iters=self.cg_iters, channel_sum=csum, dot=dot)
         c = ops.coils(u["chat"])
-        rss = comm.all_reduce_window(jnp.abs(c) ** 2, None,
-                                     axis=self.axis, reduce_dim=0)
+        rss = self.comm.allreduce_window(jnp.abs(c) ** 2, None,
+                                         axis=self.axis, reduce_dim=0)
         return u, u["rho"] * jnp.sqrt(rss)
 
     def _build(self, donate: bool):
         clone = Policy.CLONE
         in_pol = (Policy.NATURAL, clone, clone, clone,
                   U_POLICIES, U_POLICIES)
-        return make_spmd(self._frame, self.group,
-                         in_policies=in_pol,
-                         out_policies=(U_POLICIES, clone),
-                         mesh_axes=(self.axis,), check_vma=False,
-                         donate_argnums=(4, 5) if donate else ())
+        return self.comm.spmd(self._frame,
+                              in_policies=in_pol,
+                              out_policies=(U_POLICIES, clone),
+                              check_vma=False,
+                              donate_argnums=(4, 5) if donate else ())
 
     @property
     def fn(self):
@@ -113,17 +131,16 @@ class Reconstructor:
     def init_carry(self, ncoils: int, grid: int):
         """Device-placed Newton carry (rho=1 CLONE, chat=0 NATURAL)."""
         u = uinit(ncoils, grid)
-        return {"rho": comm.broadcast(u["rho"], self.group).data,
-                "chat": comm.scatter(u["chat"], self.group,
-                                     policy=Policy.NATURAL).data}
+        return {"rho": self.comm.bcast(u["rho"]).data,
+                "chat": self.comm.container(u["chat"]).data}
 
     def put_frame(self, y):
         """Segment one frame of coil data onto the group (coil dim 0)."""
-        return comm.scatter(y, self.group, policy=Policy.NATURAL).data
+        return self.comm.container(y).data
 
     def put_const(self, x):
         """Replicate a per-frame constant (mask/fov/weight)."""
-        return comm.broadcast(x, self.group).data
+        return self.comm.bcast(x).data
 
 
 @functools.lru_cache(maxsize=None)
@@ -141,12 +158,13 @@ def reconstruct_frame(y, mask, fov, weight, x0, x_ref, *,
     return rec(y, mask, fov, weight, x0, x_ref)
 
 
-def make_dist_reconstruct(group: DeviceGroup, axis: str = "data", *,
+def make_dist_reconstruct(comm, axis: str = "data", *,
                           newton=7, cg_iters=30, channel_sum="crop"):
     """Compiled distributed NLINV: coils split over ``axis`` (paper §3.2).
-    Returns the jitted frame function (kept for callers that want the
-    bare callable; new code should hold the ``Reconstructor``)."""
-    return Reconstructor(group, axis, newton=newton, cg_iters=cg_iters,
+    ``comm`` may be a Communicator or a DeviceGroup.  Returns the jitted
+    frame function (kept for callers that want the bare callable; new
+    code should hold the ``Reconstructor``)."""
+    return Reconstructor(comm, axis, newton=newton, cg_iters=cg_iters,
                          channel_sum=channel_sum).fn
 
 

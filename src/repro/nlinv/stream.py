@@ -10,8 +10,8 @@ iterations of the current one.  ``FrameStream``:
   * double-buffers acquisition upload: while the solver of frame ``f``
     is in flight (JAX dispatch is asynchronous), frame ``f+1``'s coil
     data is already being scattered (NATURAL over the group) and its
-    sampling mask broadcast — through the comm verbs, never raw
-    device_put+specs;
+    sampling mask broadcast — through the ``Communicator`` verbs
+    (``container``/``bcast``), never raw device_put+specs;
   * donates the Newton carry (``x0``/``x_ref``) to the solver so XLA
     reuses the two largest buffers frame-to-frame
     (``Reconstructor.fn_donate_carry``);
@@ -90,7 +90,7 @@ class FrameStream:
         y = np.asarray(y)
         F = y.shape[0]
         g = y.shape[-1]
-        y = pad_channels(y, rec.group.ndev, axis=1)
+        y = pad_channels(y, rec.comm.size, axis=1)
         J = y.shape[1]
         if weight is None:
             weight = sobolev_weight(g)
@@ -119,16 +119,17 @@ class FrameStream:
             frame_ms.append((time.perf_counter() - t0) * 1e3)
             images.append(img)
 
-        report = LatencyReport(frame_ms, rec.group.ndev, g, J)
+        report = LatencyReport(frame_ms, rec.comm.size, g, J)
         if report_path is not None:
             report.save(report_path)
         return jnp.stack(images), report
 
 
-def stream_movie(data, *, group=None, newton=7, cg_iters=30, damping=0.9,
+def stream_movie(data, *, comm=None, newton=7, cg_iters=30, damping=0.9,
                  channel_sum="crop", report_path=None):
-    """Convenience wrapper: dataset dict -> (images, LatencyReport)."""
-    rec = Reconstructor(group, newton=newton, cg_iters=cg_iters,
+    """Convenience wrapper: dataset dict -> (images, LatencyReport).
+    ``comm`` is a Communicator (or DeviceGroup; None = 1 device)."""
+    rec = Reconstructor(comm, newton=newton, cg_iters=cg_iters,
                         channel_sum=channel_sum)
     eng = FrameStream(rec, damping=damping)
     return eng.run(data["y"], data["masks"], data["fov"],

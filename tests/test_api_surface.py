@@ -1,0 +1,126 @@
+"""Public-API snapshot (ISSUE 2 CI satellite).
+
+``repro.core.__all__`` and the Environment/Communicator verb surface are
+the library's stable contract; any drift (a renamed verb, a changed
+parameter, a new export) must show up as an explicit diff of the
+snapshots below rather than silently changing downstream code.
+Runs in-process on whatever device count the host has — it inspects
+signatures only.
+"""
+
+import inspect
+
+import repro.core as core
+from repro.core import Communicator, Environment
+
+EXPECTED_ALL = [
+    "compat",
+    "Environment", "Communicator",
+    "DeviceGroup", "current_group", "HW", "DCN_AXES",
+    "Policy", "SegmentedArray", "segment", "gather", "overlap2d_map",
+    "broadcast", "scatter", "reduce", "all_reduce", "all_reduce_window",
+    "vdot", "copy", "all_to_all", "reduce_scatter", "hierarchical_psum",
+    "invoke_kernel", "invoke_kernel_all", "make_spmd", "PassThrough",
+    "dev_rank",
+    "fence", "barrier", "barrier_fence", "ordered",
+    "blas", "fft",
+]
+
+# Every public Communicator method and its exact parameter list (the
+# MPI-like verb set of paper §2.3 + p2p + container/launchers).
+EXPECTED_COMMUNICATOR = {
+    "container": ("self", "x", "policy", "dim", "block", "halo"),
+    "bcast": ("self", "x"),
+    "scatter": ("self", "x", "policy", "dim", "block", "halo"),
+    "gather": ("self", "seg"),
+    "allgather": ("self", "x", "dim", "axis"),
+    "reduce": ("self", "seg", "op"),
+    "allreduce": ("self", "x", "op", "hierarchical", "p2p", "axis"),
+    "allreduce_window": ("self", "x", "window", "op", "axis", "reduce_dim",
+                         "hierarchical", "window_axes", "p2p"),
+    "reduce_scatter": ("self", "seg", "op"),
+    "alltoall": ("self", "seg", "new_dim"),
+    "vdot": ("self", "x", "y", "axis", "policies"),
+    "copy": ("self", "seg", "policy", "kw"),
+    "send_recv": ("self", "x", "perm", "axis"),
+    "shift": ("self", "x", "offset", "wrap", "axis"),
+    "barrier": ("self",),
+    "fence": ("self", "arrays"),
+    "barrier_fence": ("self", "arrays"),
+    "invoke": ("self", "fn", "args", "rank", "kw"),
+    "invoke_all": ("self", "fn", "args", "kw"),
+    "spmd": ("self", "fn", "in_policies", "out_policies", "check_vma",
+             "donate_argnums", "jit"),
+}
+
+EXPECTED_ENVIRONMENT = {
+    "group": ("self", "shape", "axes"),
+    "subgroup": ("self", "n", "axes"),
+    "from_mesh": ("self", "mesh"),
+}
+
+# Old free function -> its replacement (the deprecation/migration table).
+EXPECTED_DEPRECATIONS = {
+    "current_group": "an explicit Environment()/Communicator",
+    "segment": "Communicator.container",
+    "gather": "Communicator.gather / SegmentedArray.gather",
+    "overlap2d_map": "SegmentedArray.halo_exchange",
+    "broadcast": "Communicator.bcast",
+    "scatter": "Communicator.scatter",
+    "reduce": "Communicator.reduce",
+    "all_reduce": "Communicator.allreduce",
+    "all_reduce_window": "Communicator.allreduce_window",
+    "vdot": "Communicator.vdot",
+    "copy": "Communicator.copy / SegmentedArray.to",
+    "all_to_all": "Communicator.alltoall",
+    "reduce_scatter": "Communicator.reduce_scatter",
+    "invoke_kernel": "Communicator.invoke",
+    "invoke_kernel_all": "Communicator.invoke_all",
+    "make_spmd": "Communicator.spmd",
+    "barrier": "Communicator.barrier",
+    "barrier_fence": "Communicator.barrier_fence",
+}
+
+
+def _param_names(fn):
+    return tuple(inspect.signature(fn).parameters)
+
+
+def _public_methods(cls):
+    return {n for n, m in inspect.getmembers(cls, inspect.isfunction)
+            if not n.startswith("_")}
+
+
+def test_core_all_snapshot():
+    assert list(core.__all__) == EXPECTED_ALL
+    for name in EXPECTED_ALL:
+        assert hasattr(core, name), f"__all__ names missing attr {name}"
+
+
+def test_communicator_method_surface():
+    assert _public_methods(Communicator) == set(EXPECTED_COMMUNICATOR)
+    for name, params in EXPECTED_COMMUNICATOR.items():
+        got = _param_names(getattr(Communicator, name))
+        assert got == params, f"Communicator.{name}: {got} != {params}"
+
+
+def test_environment_method_surface():
+    assert _public_methods(Environment) == set(EXPECTED_ENVIRONMENT)
+    for name, params in EXPECTED_ENVIRONMENT.items():
+        got = _param_names(getattr(Environment, name))
+        assert got == params, f"Environment.{name}: {got} != {params}"
+
+
+def test_deprecation_table():
+    for name, repl in EXPECTED_DEPRECATIONS.items():
+        fn = getattr(core, name)
+        assert getattr(fn, "__deprecated__", None) == repl, name
+
+
+def test_segmented_array_fluent_surface():
+    from repro.core import SegmentedArray
+    fluent = {"allreduce", "allreduce_window", "allgather", "alltoall",
+              "reduce", "reduce_scatter", "gather", "to", "vdot", "shift",
+              "send_recv", "halo_exchange", "invoke", "astype", "seg_len",
+              "segments", "with_data"}
+    assert fluent <= _public_methods(SegmentedArray)

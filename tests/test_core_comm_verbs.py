@@ -1,6 +1,12 @@
 """The extended verb set (windowed all-reduce, segmented vdot, metadata-
 correct copy) plus the halo-exchange and hierarchical-psum contracts —
 all checked on real multi-device host meshes against numpy references.
+
+The COMMUNICATOR / COMMUNICATOR_1DEV payloads cover the object-oriented
+surface (ISSUE 2): Environment/Communicator verb methods, the new
+allgather + send_recv/shift p2p family, the ppermute-ring all-reduce
+path, parity with the deprecated free functions, and the
+seg_len/segments/all_to_all metadata fixes — on 4 and 1 device(s).
 """
 
 from helpers import run_with_devices
@@ -118,8 +124,166 @@ check("hier_fallback", np.allclose(np.asarray(out2.data), x2.sum(0),
 """
 
 
+COMMUNICATOR = """
+from repro.core import Environment, Policy
+import repro.core as core
+
+env = Environment()
+comm = env.group((4,), ("data",))
+check("env_repr", env.ndev == 4 and comm.size == 4 and comm.axis == "data")
+
+# --- scatter -> gather round-trip across all four policies -------------
+x = np.random.randn(10, 6).astype(np.float32)
+for pol, kw in ((Policy.NATURAL, {}), (Policy.BLOCK, dict(block=2)),
+                (Policy.CLONE, {}), (Policy.OVERLAP2D, dict(halo=1))):
+    s = comm.scatter(x, policy=pol, **kw)
+    check(f"roundtrip_{pol.value}", np.allclose(comm.gather(s), x))
+
+# --- allgather vs jnp.concatenate of the per-rank segments -------------
+xa = np.random.randn(8, 5, 3).astype(np.float32)
+sa = comm.container(xa)
+ag = sa.allgather()
+check("allgather_clone", ag.policy is Policy.CLONE)
+shards = sorted(sa.data.addressable_shards, key=lambda sh: sh.index[0].start)
+ref = jnp.concatenate([jnp.asarray(np.asarray(sh.data)) for sh in shards],
+                      axis=0)
+check("allgather_concat", np.allclose(np.asarray(ag.data), np.asarray(ref)))
+check("allgather_replicated", all(np.allclose(np.asarray(sh.data), xa)
+                                  for sh in ag.data.addressable_shards))
+
+# --- send_recv / shift ring identity (p2p verbs) -----------------------
+xs = np.arange(16, dtype=np.float32).reshape(16, 1)
+s = comm.container(xs)
+r = s
+for _ in range(4):
+    r = r.shift(1)
+check("shift_ring_identity", np.allclose(comm.gather(r), xs))
+one = comm.gather(s.shift(1))
+check("shift_rotates", np.allclose(one, np.roll(xs, 4, axis=0)))
+open_ = comm.gather(s.shift(1, wrap=False))
+want = np.roll(xs, 4, axis=0); want[:4] = 0
+check("shift_open_boundary", np.allclose(open_, want))
+perm = [(i, (i + 1) % 4) for i in range(4)]
+check("send_recv_ring", np.allclose(comm.gather(comm.send_recv(s, perm)), one))
+inv = [(d, sr) for (sr, d) in perm]
+check("send_recv_inverse",
+      np.allclose(comm.gather(comm.send_recv(comm.send_recv(s, perm), inv)), xs))
+partial = comm.gather(s.send_recv([(0, 1), (1, 0)]))
+wantp = np.zeros_like(xs)
+wantp[0:4], wantp[4:8] = xs[4:8], xs[0:4]       # ranks 2,3 receive zeros
+check("send_recv_zero_fill", np.allclose(partial, wantp))
+
+# --- ppermute-ring all-reduce == psum all-reduce -----------------------
+m = np.random.randn(8, 6, 6).astype(np.float32)
+sm = comm.container(m)
+check("p2p_allreduce", np.allclose(np.asarray(sm.allreduce(p2p=True).data),
+                                   m.sum(0), atol=1e-5))
+win = ((1, 5), (1, 5))
+a = comm.allreduce_window(sm, win)
+b = comm.allreduce_window(sm, win, p2p=True)
+check("p2p_window_matches_psum",
+      np.allclose(np.asarray(a.data), np.asarray(b.data), atol=1e-5))
+check("p2p_max", np.allclose(np.asarray(sm.allreduce("max", p2p=True).data),
+                             m.max(0)))
+
+# --- in-shard_map forms of the new verbs through comm.spmd -------------
+def body(xl):
+    return comm.allgather(xl, axis="data"), comm.shift(xl, 1, axis="data")
+fn = comm.spmd(body, in_policies=(Policy.NATURAL,),
+               out_policies=(Policy.CLONE, Policy.NATURAL), check_vma=False)
+full, shifted = fn(jnp.asarray(xa))
+check("allgather_local", np.allclose(np.asarray(full), xa))
+check("shift_local", np.allclose(np.asarray(shifted), np.roll(xa, 2, axis=0)))
+
+# --- parity: communicator methods == deprecated free functions ---------
+sf = core.segment(m, comm)            # shim accepts the communicator
+check("parity_reduce", np.allclose(comm.reduce(sm), core.reduce(sf),
+                                   atol=1e-6))
+check("parity_allreduce", np.allclose(np.asarray(sm.allreduce().data),
+                                      np.asarray(core.all_reduce(sf).data),
+                                      atol=1e-6))
+check("parity_reduce_scatter",
+      np.allclose(comm.gather(comm.reduce_scatter(sm)),
+                  core.gather(core.reduce_scatter(sf)), atol=1e-6))
+check("parity_bcast", np.allclose(np.asarray(comm.bcast(m).data),
+                                  np.asarray(core.broadcast(m, comm).data)))
+u1 = {"rho": comm.bcast(m[0]), "chat": sm}
+check("parity_vdot", np.allclose(float(comm.vdot(u1, u1)),
+                                 float(core.vdot(u1, u1)), rtol=1e-6))
+check("deprecation_marked",
+      core.all_reduce.__deprecated__ == "Communicator.allreduce"
+      and core.segment.__deprecated__ == "Communicator.container")
+
+# --- metadata fixes: seg_len/segments + all_to_all ---------------------
+sb = comm.container(np.random.randn(21, 3).astype(np.float32),
+                    policy=Policy.BLOCK, block=2)
+check("segments_block_remainder",
+      [t[0] for t in sb.segments()] == [6, 6, 5, 4])
+check("seg_len_block", sb.seg_len(3) == 4 and sb.seg_len() == 6)
+so = comm.container(np.random.randn(16, 5).astype(np.float32),
+                    policy=Policy.OVERLAP2D, halo=2)
+check("segments_overlap_halo", [t[0] for t in so.segments()] == [6, 8, 8, 6])
+sn = comm.container(np.random.randn(10, 3).astype(np.float32))
+check("segments_natural_remainder",
+      [t[0] for t in sn.segments()] == [3, 3, 3, 1])
+xt = np.random.randn(10, 6, 3).astype(np.float32)
+st = comm.container(xt)                    # pads 10 -> 12 along dim 0
+t2 = st.alltoall(1)                        # pads 6 -> 8 along dim 1
+check("alltoall_metadata", t2.dim == 1 and t2.orig_len == 6)
+check("alltoall_roundtrip", np.allclose(comm.gather(t2), xt))
+check("alltoall_back", np.allclose(comm.gather(t2.alltoall(0)), xt))
+
+# --- fluent container forms -------------------------------------------
+check("fluent_to_clone", sm.to(Policy.CLONE).policy is Policy.CLONE)
+ident = so.halo_exchange(lambda e: e[2:-2])
+check("fluent_halo_identity", np.allclose(comm.gather(ident),
+                                          comm.gather(so)))
+ext = so.halo_exchange()
+check("fluent_halo_extended", ext.global_shape[0] == 16 + 4 * 4
+      and ext.policy is Policy.NATURAL)
+"""
+
+COMMUNICATOR_1DEV = """
+from repro.core import Environment, Policy
+import repro.core as core
+
+comm = Environment().subgroup(1)
+x = np.random.randn(6, 4).astype(np.float32)
+s = comm.container(x)
+check("gather_1dev", np.allclose(comm.gather(s), x))
+check("allgather_1dev", np.allclose(np.asarray(s.allgather().data), x))
+check("shift_1dev_identity", np.allclose(comm.gather(s.shift(1)), x))
+check("shift_1dev_open", np.allclose(comm.gather(s.shift(1, wrap=False)),
+                                     np.zeros_like(x)))
+check("send_recv_1dev", np.allclose(comm.gather(comm.send_recv(s, [(0, 0)])),
+                                    x))
+check("allreduce_1dev", np.allclose(np.asarray(s.allreduce().data), x.sum(0),
+                                    atol=1e-6))
+check("p2p_allreduce_1dev",
+      np.allclose(np.asarray(s.allreduce(p2p=True).data), x.sum(0),
+                  atol=1e-6))
+# degenerate in-shard_map forms (axis=None -> plain local math)
+check("local_allgather_none", np.allclose(comm.allgather(jnp.asarray(x)), x))
+check("local_shift_none", np.allclose(core.comm.shift(jnp.asarray(x), 1),
+                                      x))
+# parity with the deprecated free functions on one device
+sf = core.segment(x, comm)
+check("parity_reduce_1dev", np.allclose(comm.reduce(s), core.reduce(sf),
+                                        atol=1e-6))
+check("parity_gather_1dev", np.allclose(comm.gather(s), core.gather(sf)))
+"""
+
+
 def test_comm_verbs_4dev():
     run_with_devices(VERBS, ndev=4)
+
+
+def test_communicator_api_4dev():
+    run_with_devices(COMMUNICATOR, ndev=4)
+
+
+def test_communicator_api_1dev():
+    run_with_devices(COMMUNICATOR_1DEV, ndev=1)
 
 
 def test_overlap2d_halo_vs_numpy():
