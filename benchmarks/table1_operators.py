@@ -74,4 +74,20 @@ def rows(quick=False):
     out.append(fmt_row(f"table1_CGiter_g{g}_J{J}",
                        time_fn(jax.jit(cg_iter), u0, du),
                        "ab=6;scalar_products=2"))
+
+    # libblas port: the CG residual update as the fused axpy+dot plan
+    # (one pass over w) vs the two-plan form — both plan-cache-hit warm.
+    from repro.core import Environment
+    from repro.lib import blas as lblas, plan_stats
+    comm = Environment().subgroup(1)
+    sx = comm.container(jnp.asarray(d["y"][0]))
+    sy = comm.container(jnp.asarray(d["y"][0]) * 0.5)
+    us_fused = time_fn(lambda: lblas.axpy_norm2(-0.25, sx, sy)[1])
+    us_split = time_fn(lambda: lblas.norm2(lblas.axpy(-0.25, sx, sy)))
+    out.append(fmt_row(f"table1_axpynorm2_fused_g{g}_J{J}", us_fused,
+                       f"split={us_split:.1f}us"))
+    s = plan_stats()
+    out.append(fmt_row("table1_plan_cache", 0.0,
+                       f"hits={s['hits']};builds={s['builds']};"
+                       f"hit_rate={s['hit_rate']}"))
     return out

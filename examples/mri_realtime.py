@@ -68,6 +68,10 @@ def main():
           f"{s['first_frame_ms']:.0f} ms, steady {s['mean_ms']:.1f} ms/frame "
           f"(p95 {s['p95_ms']:.1f}, jitter {s['jitter_ms']:.2f} ms, "
           f"{s['fps']:.1f} fps)")
+    pc = s.get("plan_cache", {})
+    print(f"plan cache: frame builds {pc.get('frame_builds')}, "
+          f"steady builds {pc.get('steady_builds')}, "
+          f"hit rate {pc.get('hit_rate')}")
     if args.report:
         print(f"latency report -> {args.report}")
     else:

@@ -13,7 +13,8 @@ multi-device segmentation on CPU.
 import numpy as np
 
 import jax.numpy as jnp
-from repro.core import Environment, Policy, blas, fft
+from repro.core import Environment, Policy
+from repro.lib import blas, fft, plan_stats
 
 # -- environment / dev_group (paper §2.1) ----------------------------------
 env = Environment()
@@ -43,14 +44,16 @@ pairs = [(0, 1), (1, 0)] if comm.size > 1 else [(0, 0)]
 swapped = comm.send_recv(seg, pairs)    # pairwise exchange
 print("send_recv:", swapped.global_shape)
 
-# -- segmented libraries (paper §2.4) ----------------------------------------
-k = fft.fft2_batched(seg, centered=True)               # batched FFT
+# -- ported libraries (paper §2.4/§4: plan once, call many) ------------------
+k = fft.fft2_batched(seg, centered=True)               # builds the FFT plan
 img = fft.fft2_batched(k, inverse=True, centered=True)
 print("fft roundtrip:", np.allclose(comm.gather(img), x, atol=1e-4))
 
 y = comm.container(np.random.randn(8, 64, 64).astype(np.complex64))
 z = blas.axpy(2.0 + 1j, seg, y)                        # a*X + Y
 print("dot <x,y> =", complex(blas.dot(seg, y)))
+w, d = blas.axpy_dot(0.5, seg, y, y)                   # fused epilogue
+print("plan cache:", plan_stats())                     # hits/builds/hit_rate
 
 # -- invoke_kernel (paper §2.5) ----------------------------------------------
 def my_kernel(xl, yl):                  # receives local ranges

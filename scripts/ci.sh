@@ -15,6 +15,28 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== public-API snapshot (repro.core / Communicator surface) ==="
 python -m pytest tests/test_api_surface.py -q
 
+echo "=== docs link-check (relative links in README.md + docs/) ==="
+python - <<'EOF'
+import pathlib, re, sys
+bad = []
+for md in [pathlib.Path("README.md"), *sorted(pathlib.Path("docs").glob("*.md"))]:
+    for m in re.finditer(r"\]\(([^)\s#]+)(#[^)]*)?\)", md.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not re.fullmatch(r"[A-Za-z0-9_./-]+", target) or set(target) <= {"."}:
+            continue   # code like `invoke_kernel[_all](...)`, not a link
+        if not (md.parent / target).exists():
+            bad.append(f"{md}: broken link -> {target}")
+if bad:
+    print("\n".join(bad))
+    sys.exit(1)
+print("docs links OK")
+EOF
+
+echo "=== doctests (Communicator verbs / SegmentedArray fluent surface) ==="
+python -m pytest --doctest-modules src/repro/core -q
+
 echo "=== tier-1: single device ==="
 python -m pytest -x -q "$@"
 

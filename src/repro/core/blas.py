@@ -1,59 +1,38 @@
-"""Segmented BLAS — the MGPU CUBLAS wrapper analogue (paper §2.4, Fig. 4).
+"""Deprecated shim — the segmented BLAS moved to ``repro.lib.blas``.
 
-The paper consolidates CUBLAS under a segmented-container interface:
-``a*X + Y`` scales linearly (no communication), scalar products need one
-inter-device reduction, and ``A · B`` needs an *additional inter-device
-reduction step* when the contracted dimension is split — exactly the
-``gemm_ksplit`` + psum path here (on TPU this is the classic tensor-
-parallel matmul).
+The MGPU CUBLAS-wrapper analogue (paper §2.4, Fig. 4) is now a *ported
+library* on the plan/plan-cache substrate of paper §4: every operation
+in ``repro.lib.blas`` is a cached plan keyed on operand layout + group,
+and the port adds the fused ``axpy_dot``/``dot_allreduce`` epilogues the
+CG hot path wants.  These free functions forward there (through the same
+cache) and emit ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
-
-from . import compat
-from .runtime import DeviceGroup
-from .segmented import Policy, SegmentedArray
-from .comm import _axis_arg  # noqa: F401  (gemm_ksplit below)
+import functools
+import warnings
 
 
-def axpy(a, x: SegmentedArray, y: SegmentedArray) -> SegmentedArray:
-    """a*X + Y, segment-local (strong-scaling op in paper Fig. 4)."""
-    return y.with_data(a * x.data + y.data)
+def _deprecated(name: str):
+    def _target(*args, **kw):
+        from ..lib import blas as lblas
+        return getattr(lblas, name)(*args, **kw)
+
+    @functools.wraps(_target)
+    def shim(*args, **kw):
+        warnings.warn(
+            f"repro.core.blas.{name} is deprecated; use "
+            f"repro.lib.blas.{name}", DeprecationWarning, stacklevel=2)
+        return _target(*args, **kw)
+
+    shim.__name__ = name
+    shim.__deprecated__ = f"repro.lib.blas.{name}"
+    return shim
 
 
-def dot(x: SegmentedArray, y: SegmentedArray) -> jax.Array:
-    """Scalar product <x, y> (conjugating) with one reduction across
-    segments (paper: 'scalar products of all data' in the CG loop) —
-    routed through the ``vdot`` comm verb."""
-    from .comm import vdot
-    return vdot(x, y)
-
-
-def norm2(x: SegmentedArray) -> jax.Array:
-    return jnp.real(dot(x, x))
-
-
-def gemm_batched(a: SegmentedArray, b: SegmentedArray) -> SegmentedArray:
-    """Batched matmul over the segmented batch dim — no communication
-    (paper Fig. 4 measures 12 square matrices split across GPUs)."""
-    return a.with_data(jnp.einsum("bij,bjk->bik", a.data, b.data))
-
-
-def gemm_ksplit(a: SegmentedArray, b: SegmentedArray) -> SegmentedArray:
-    """A·B with the contraction dim segmented: local partial matmul +
-    inter-device reduction (the paper's non-scaling A·B case)."""
-    ax = _axis_arg(a.mesh_axes)
-
-    def body(al, bl):
-        return lax.psum(al @ bl, ax)
-
-    # A split on dim 1 (k), B split on dim 0 (k)
-    out = compat.shard_map(body, mesh=a.group.mesh,
-                           in_specs=(P(None, ax), P(ax, None)),
-                           out_specs=P())(a.data, b.data)
-    return SegmentedArray(out, a.group, Policy.CLONE, 0, a.mesh_axes)
+axpy = _deprecated("axpy")
+dot = _deprecated("dot")
+norm2 = _deprecated("norm2")
+gemm_batched = _deprecated("gemm_batched")
+gemm_ksplit = _deprecated("gemm_ksplit")

@@ -163,25 +163,50 @@ class Communicator:
     # -- containers (paper §2.2: the ctor controls the split) -------------
     def container(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
                   block: int | None = None, halo: int = 0) -> SegmentedArray:
-        """Build a segmented container on this communicator's group."""
+        """Build a segmented container on this communicator's group.
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([[1., 2.], [3., 4.]])
+        >>> (seg.policy, seg.dim, seg.global_shape)
+        (<Policy.NATURAL: 'natural'>, 0, (2, 2))
+        """
         return _segmented.segment(x, self.group, policy=policy, dim=dim,
                                   mesh_axes=self.mesh_axes, block=block,
                                   halo=halo)
 
     # -- collectives (paper §2.3, Fig. 3) ---------------------------------
     def bcast(self, x) -> SegmentedArray:
-        """Replicate a local array on every device (-> CLONE container)."""
+        """Replicate a local array on every device (-> CLONE container).
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> comm.bcast([1., 2., 3.]).policy
+        <Policy.CLONE: 'clone'>
+        """
         return self.container(x, policy=Policy.CLONE)
 
     def scatter(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
                 block: int | None = None, halo: int = 0) -> SegmentedArray:
         """Split a local array across the group (Fig. 3 ``scatter`` — the
-        container ctor with an explicit policy)."""
+        container ctor with an explicit policy).
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> comm.scatter([[1., 2.], [3., 4.]], dim=1).seg_len(0)
+        2
+        """
         return self.container(x, policy=policy, dim=dim, block=block,
                               halo=halo)
 
     def gather(self, seg: SegmentedArray) -> jax.Array:
-        """Materialize the logical array of a container (Fig. 3)."""
+        """Materialize the logical array of a container (Fig. 3).
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> comm.gather(comm.container([1., 2., 3.])).tolist()
+        [1.0, 2.0, 3.0]
+        """
         return _segmented.gather(seg)
 
     def _check_local_axis(self, axis, verb: str):
@@ -197,19 +222,41 @@ class Communicator:
     def allgather(self, x, *, dim: int | None = None, axis=None):
         """MPI_Allgather: the whole logical array on every device.  Eager
         on a container (-> CLONE, along its own segmented dim), or
-        in-shard_map on the local shard (gathers along ``dim``)."""
+        in-shard_map on the local shard (gathers along ``dim``).
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> full = comm.allgather(comm.container([1., 2., 3., 4.]))
+        >>> (full.policy, full.data.tolist())
+        (<Policy.CLONE: 'clone'>, [1.0, 2.0, 3.0, 4.0])
+        """
         if not isinstance(x, SegmentedArray):
             self._check_local_axis(axis, "allgather")
         return _comm.all_gather(x, dim=dim, axis=axis)
 
     def reduce(self, seg: SegmentedArray, op: str = "sum") -> jax.Array:
-        """Merge the segments elementwise into one local array (Fig. 3)."""
+        """Merge the segments elementwise into one local array (Fig. 3).
+
+        The segmented dim is reduced away:
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> comm.reduce(comm.container([[1., 2.], [3., 4.]])).tolist()
+        [4.0, 6.0]
+        """
         return _comm.reduce(seg, op)
 
     def allreduce(self, x, op: str = "sum", *, hierarchical: bool = False,
                   p2p: bool = False, axis=None):
         """Reduce + replicate (the paper's Σ ρ_g).  Eager on a container,
-        or in-shard_map on the local shard with ``axis=self.axis``."""
+        or in-shard_map on the local shard with ``axis=self.axis``.
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> tot = comm.allreduce(comm.container([[1., 2.], [3., 4.]]))
+        >>> (tot.policy, tot.data.tolist())
+        (<Policy.CLONE: 'clone'>, [4.0, 6.0])
+        """
         if isinstance(x, SegmentedArray):
             return _comm.all_reduce(x, op, hierarchical=hierarchical,
                                     p2p=p2p)
@@ -225,7 +272,20 @@ class Communicator:
                          p2p: bool = False):
         """Windowed all-reduce (the paper's ``kern_all_red_p2p_2d`` as a
         primitive); see ``core.comm.all_reduce_window``.  The group and
-        mesh axes are bound by this communicator."""
+        mesh axes are bound by this communicator.
+
+        Only the ``window`` section goes on the wire, scattered back
+        into zeros (here: the centered 2x2 of a 4x4 after the coil-dim
+        reduction):
+
+        >>> import numpy as np
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container(np.ones((2, 4, 4), np.float32))
+        >>> out = comm.allreduce_window(seg, ((1, 3), (1, 3)))
+        >>> out.data[:, 1].tolist()
+        [0.0, 2.0, 2.0, 0.0]
+        """
         if not isinstance(x, SegmentedArray):
             self._check_local_axis(axis, "allreduce_window")
         return _comm.all_reduce_window(x, window, op=op, axis=axis,
@@ -237,16 +297,39 @@ class Communicator:
 
     def reduce_scatter(self, seg: SegmentedArray,
                        op: str = "sum") -> SegmentedArray:
-        """MPI_Reduce_scatter: reduce segments, result left segmented."""
+        """MPI_Reduce_scatter: reduce segments, result left segmented.
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([[1., 2.], [3., 4.]])
+        >>> comm.reduce_scatter(seg).gather().tolist()
+        [4.0, 6.0]
+        """
         return _comm.reduce_scatter(seg, op)
 
     def alltoall(self, seg: SegmentedArray, new_dim: int) -> SegmentedArray:
-        """MPI_Alltoall: re-segment a container onto another dim."""
+        """MPI_Alltoall: re-segment a container onto another dim.
+
+        >>> import numpy as np
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container(np.zeros((4, 6), np.float32))  # dim 0
+        >>> comm.alltoall(seg, 1).dim
+        1
+        """
         return _comm.all_to_all(seg, new_dim)
 
     def vdot(self, x, y, *, axis=None, policies=None):
         """Segmented inner product over mixed CLONE/NATURAL pytrees (the
-        CG 'scalar products of all data' of paper Table 1)."""
+        CG 'scalar products of all data' of paper Table 1).
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> x = comm.container([1., 2.])
+        >>> y = comm.container([3., 4.])
+        >>> float(comm.vdot(x, y))
+        11.0
+        """
         leaves = jax.tree.leaves(
             x, is_leaf=lambda l: isinstance(l, SegmentedArray))
         if not all(isinstance(l, SegmentedArray) for l in leaves):
@@ -255,13 +338,28 @@ class Communicator:
 
     def copy(self, seg: SegmentedArray, *, policy: Policy | None = None,
              **kw) -> SegmentedArray:
-        """Segmented-to-segmented copy / re-segmentation (Fig. 3)."""
+        """Segmented-to-segmented copy / re-segmentation (Fig. 3).
+
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([1., 2., 3., 4.])
+        >>> comm.copy(seg, policy=Policy.CLONE).policy
+        <Policy.CLONE: 'clone'>
+        """
         return _comm.copy(seg, policy=policy, **kw)
 
     # -- point-to-point (the paper's P2P transfer path) -------------------
     def send_recv(self, x, perm, *, axis=None):
         """Pairwise segment exchange: ship rank ``src``'s segment to rank
-        ``dst`` for every ``(src, dst)`` pair (``lax.ppermute``)."""
+        ``dst`` for every ``(src, dst)`` pair (``lax.ppermute``); ranks
+        nothing is sent to receive zeros.
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([5., 6.])
+        >>> comm.send_recv(seg, [(0, 0)]).gather().tolist()  # identity
+        [5.0, 6.0]
+        """
         if not isinstance(x, SegmentedArray):
             self._check_local_axis(axis, "send_recv")
         return _comm.send_recv(x, perm, axis=axis)
@@ -269,7 +367,19 @@ class Communicator:
     def shift(self, x, offset: int = 1, *, wrap: bool = True, axis=None):
         """Ring shift by ``offset`` (``wrap=False``: edges get zeros).
         In-shard_map form: pass ``axis`` (e.g. ``comm.axis``); the ring
-        size is that axis's extent."""
+        size is that axis's extent.
+
+        On one device the ring has a single rank, so a wrapped shift is
+        the identity and an open-boundary shift zero-fills:
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([5., 6.])
+        >>> comm.shift(seg, 1).gather().tolist()
+        [5.0, 6.0]
+        >>> comm.shift(seg, 1, wrap=False).gather().tolist()
+        [0.0, 0.0]
+        """
         if isinstance(x, SegmentedArray):
             return _comm.shift(x, offset, wrap=wrap)
         if axis is None:
@@ -285,34 +395,77 @@ class Communicator:
 
     # -- synchronization (paper §2.5) -------------------------------------
     def barrier(self) -> None:
-        """All devices of the group reach this point."""
+        """All devices of the group reach this point.
+
+        >>> from repro.core import Environment
+        >>> Environment().subgroup(1).barrier()   # returns None
+        """
         _sync.barrier(self.group)
 
     def fence(self, *arrays):
-        """Host-block until the given arrays are computed."""
+        """Host-block until the given arrays are computed.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> comm.fence(jnp.arange(3.0) * 2).tolist()
+        [0.0, 2.0, 4.0]
+        """
         return _sync.fence(*arrays)
 
     def barrier_fence(self, *arrays):
-        """Fence, then barrier — the paper's strongest primitive."""
+        """Fence, then barrier — the paper's strongest primitive.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> comm.barrier_fence(jnp.ones(2)).tolist()
+        [1.0, 1.0]
+        """
         return _sync.barrier_fence(*arrays, group=self.group)
 
     # -- kernel launch (paper §2.5) ---------------------------------------
     def invoke(self, fn: Callable, *args, rank: int, **kw):
-        """Launch ``fn`` in the context of one device of the group."""
+        """Launch ``fn`` in the context of one device of the group
+        (other ranks' segments are zero-masked).
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([1., 2.])
+        >>> comm.invoke(lambda xl: xl * 10, seg, rank=0).gather().tolist()
+        [10.0, 20.0]
+        """
         kw.setdefault("mesh_axes", self.mesh_axes)
         return _invoke.invoke_kernel(fn, *args, rank=rank, group=self.group,
                                      **kw)
 
     def invoke_all(self, fn: Callable, *args, **kw):
         """Launch ``fn`` on every device; segmented args arrive as local
-        ranges, plain arrays are broadcast."""
+        ranges, plain arrays are broadcast.
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> seg = comm.container([1., 2.])
+        >>> comm.invoke_all(lambda xl: xl + 1, seg).gather().tolist()
+        [2.0, 3.0]
+        """
         kw.setdefault("mesh_axes", self.mesh_axes)
         return _invoke.invoke_kernel_all(fn, *args, group=self.group, **kw)
 
     def spmd(self, fn: Callable, *, in_policies, out_policies,
              check_vma: bool = True, donate_argnums=(), jit: bool = True):
         """Compile an SPMD program from segmentation policies — the one
-        launch point algorithms use (no specs, no shard_map)."""
+        launch point algorithms use (no specs, no shard_map).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import Environment, Policy
+        >>> comm = Environment().subgroup(1)
+        >>> prog = comm.spmd(lambda xl: 2 * xl,
+        ...                  in_policies=(Policy.NATURAL,),
+        ...                  out_policies=Policy.NATURAL)
+        >>> prog(jnp.arange(2.0)).tolist()
+        [0.0, 2.0]
+        """
         return _invoke.make_spmd(fn, self.group, in_policies=in_policies,
                                  out_policies=out_policies,
                                  mesh_axes=self.mesh_axes,

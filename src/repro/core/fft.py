@@ -1,39 +1,44 @@
-"""Segmented batched FFT — the MGPU CUFFT wrapper analogue (paper §2.4).
+"""Deprecated shim — the segmented FFT moved to ``repro.lib.fft``.
 
-The paper computes many independent 2-D FFTs in parallel by segmenting
-the batch across devices ("individual FFTs can currently not be split
-across devices") — the same contract here: the batch dim is segmented,
-each shard runs its local batched FFT, zero communication.  ``centered``
-applies the fftshift convention needed by the MRI DTFT operator.
+The MGPU CUFFT-wrapper analogue (paper §2.4) is now a *ported library*
+on the plan/plan-cache substrate of paper §4: ``repro.lib.fft`` builds a
+plan per (shape, dtype, direction, policy, group) and caches it, so the
+per-frame hot path never re-sets-up the transform.  These free functions
+forward there (through the same cache) and emit ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
+import functools
+import warnings
+
 import jax
-import jax.numpy as jnp
 
 from .segmented import SegmentedArray
 
 
-def _fft2_local(x: jax.Array, inverse: bool, centered: bool) -> jax.Array:
-    axes = (-2, -1)
-    if centered:
-        x = jnp.fft.ifftshift(x, axes=axes)
-    x = jnp.fft.ifft2(x, axes=axes, norm="ortho") if inverse \
-        else jnp.fft.fft2(x, axes=axes, norm="ortho")
-    if centered:
-        x = jnp.fft.fftshift(x, axes=axes)
-    return x
+def _deprecated(name: str, target):
+    @functools.wraps(target)
+    def shim(*args, **kw):
+        warnings.warn(
+            f"repro.core.fft.{name} is deprecated; use repro.lib.fft.{name}",
+            DeprecationWarning, stacklevel=2)
+        return target(*args, **kw)
+    shim.__deprecated__ = f"repro.lib.fft.{name}"
+    return shim
 
 
-def fft2_batched(x: SegmentedArray, inverse: bool = False,
-                 centered: bool = False) -> SegmentedArray:
-    """Batched 2-D FFT over a batch-segmented container (no comm) —
-    launched through the container's ``invoke`` (paper §2.5: segmented
-    libraries are kernels over local ranges)."""
-    return x.invoke(lambda xl: _fft2_local(xl, inverse, centered))
+def _fft2_batched(x: SegmentedArray, inverse: bool = False,
+                  centered: bool = False) -> SegmentedArray:
+    from ..lib import fft as lfft
+    return lfft.fft2_batched(x, inverse=inverse, centered=centered)
 
 
-def fft2(x: jax.Array, inverse: bool = False, centered: bool = False) -> jax.Array:
-    """Plain (non-segmented) centered FFT used by single-device paths."""
-    return _fft2_local(x, inverse, centered)
+def _fft2(x: jax.Array, inverse: bool = False,
+          centered: bool = False) -> jax.Array:
+    from ..lib import fft as lfft
+    return lfft.fft2(x, inverse=inverse, centered=centered)
+
+
+fft2_batched = _deprecated("fft2_batched", _fft2_batched)
+fft2 = _deprecated("fft2", _fft2)

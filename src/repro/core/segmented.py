@@ -162,49 +162,126 @@ class SegmentedArray:
         return Communicator(self.group, self.mesh_axes)
 
     def to(self, policy: "Policy | None" = None, **kw) -> "SegmentedArray":
-        """Re-segment under a new policy/dim (``comm.copy``), e.g.
-        ``x.to(Policy.CLONE)``."""
+        """Re-segment under a new policy/dim (``comm.copy``).
+
+        >>> from repro.core import Environment, Policy
+        >>> seg = Environment().subgroup(1).container([1., 2.])
+        >>> seg.to(Policy.CLONE).policy
+        <Policy.CLONE: 'clone'>
+        """
         from .comm import copy
         return copy(self, policy=policy, **kw)
 
     def gather(self) -> jax.Array:
-        """Materialize the logical array (inverse of construction)."""
+        """Materialize the logical array (inverse of construction).
+
+        >>> from repro.core import Environment
+        >>> Environment().subgroup(1).container([1., 2.]).gather().tolist()
+        [1.0, 2.0]
+        """
         return gather(self)
 
     def reduce(self, op: str = "sum") -> jax.Array:
+        """Merge the segments: the segmented dim is reduced away.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([[1., 2.], [3., 4.]])
+        >>> seg.reduce().tolist()
+        [4.0, 6.0]
+        """
         from .comm import reduce
         return reduce(self, op)
 
     def allreduce(self, op: str = "sum", *, hierarchical: bool = False,
                   p2p: bool = False) -> "SegmentedArray":
+        """Reduce + replicate (-> CLONE container).
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([[1., 2.], [3., 4.]])
+        >>> seg.allreduce().data.tolist()
+        [4.0, 6.0]
+        """
         from .comm import all_reduce
         return all_reduce(self, op, hierarchical=hierarchical, p2p=p2p)
 
     def allreduce_window(self, window=None, **kw) -> "SegmentedArray":
+        """Windowed all-reduce: only ``window`` goes on the wire,
+        scattered back into zeros (paper ``kern_all_red_p2p_2d``).
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([[1., 2., 3., 4.]])
+        >>> seg.allreduce_window(((1, 3),)).data.tolist()
+        [0.0, 2.0, 3.0, 0.0]
+        """
         from .comm import all_reduce_window
         return all_reduce_window(self, window, **kw)
 
     def allgather(self) -> "SegmentedArray":
+        """MPI_Allgather: the whole logical array, CLONEd.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([1., 2., 3.])
+        >>> seg.allgather().policy
+        <Policy.CLONE: 'clone'>
+        """
         from .comm import all_gather
         return all_gather(self)
 
     def reduce_scatter(self, op: str = "sum") -> "SegmentedArray":
+        """Reduce the segments, leave the result segmented.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([[1., 2.], [3., 4.]])
+        >>> seg.reduce_scatter().gather().tolist()
+        [4.0, 6.0]
+        """
         from .comm import reduce_scatter
         return reduce_scatter(self, op)
 
     def alltoall(self, new_dim: int) -> "SegmentedArray":
+        """Re-segment onto ``new_dim`` with an all-to-all.
+
+        >>> import numpy as np
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container(
+        ...     np.zeros((2, 4), np.float32))
+        >>> seg.alltoall(1).dim
+        1
+        """
         from .comm import all_to_all
         return all_to_all(self, new_dim)
 
     def vdot(self, other):
+        """Inner product of the logical arrays (one reduction).
+
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> float(comm.container([1., 2.]).vdot(comm.container([3., 4.])))
+        11.0
+        """
         from .comm import vdot
         return vdot(self, other)
 
     def shift(self, offset: int = 1, *, wrap: bool = True) -> "SegmentedArray":
+        """Ring-shift segments by ``offset`` (p2p path); on a 1-segment
+        ring the wrapped shift is the identity.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([5., 6.])
+        >>> seg.shift(1).gather().tolist()
+        [5.0, 6.0]
+        """
         from .comm import shift
         return shift(self, offset, wrap=wrap)
 
     def send_recv(self, perm) -> "SegmentedArray":
+        """Pairwise segment exchange over ``(src, dst)`` pairs.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([5., 6.])
+        >>> seg.send_recv([(0, 0)]).gather().tolist()
+        [5.0, 6.0]
+        """
         from .comm import send_recv
         return send_recv(self, perm)
 
@@ -213,13 +290,28 @@ class SegmentedArray:
         it to every halo-extended block (``(rows + 2h, ...) -> (rows,
         ...)``).  Without: return the halo-extended container itself
         (each segment physically carries its neighbours' rows, the
-        paper's overlapped splitting of Fig. 1)."""
+        paper's overlapped splitting of Fig. 1).
+
+        A single segment has no neighbours, so its halo rows zero-fill:
+
+        >>> from repro.core import Environment, Policy
+        >>> seg = Environment().subgroup(1).container(
+        ...     [[1., 1.], [2., 2.]], policy=Policy.OVERLAP2D, halo=1)
+        >>> seg.halo_exchange().gather().tolist()
+        [[0.0, 0.0], [1.0, 1.0], [2.0, 2.0], [0.0, 0.0]]
+        """
         return overlap2d_map(self, fn)
 
     def invoke(self, fn: Callable, *args) -> "SegmentedArray":
         """Launch a shape-preserving kernel over this container's group
         with the local segment as first argument (``invoke_kernel_all``);
-        the result inherits this container's segmentation."""
+        the result inherits this container's segmentation.
+
+        >>> from repro.core import Environment
+        >>> seg = Environment().subgroup(1).container([1., 2.])
+        >>> seg.invoke(lambda xl: xl * 10).gather().tolist()
+        [10.0, 20.0]
+        """
         from .invoke import invoke_kernel_all
         res = invoke_kernel_all(fn, self, *args, group=self.group,
                                 out_specs=self.pspec,

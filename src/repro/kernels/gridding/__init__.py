@@ -1,0 +1,6 @@
+from .ops import degrid, grid_adjoint, interp_matrices
+from .kernel import degrid_pallas, grid_pallas
+from .ref import degrid_ref, grid_ref
+
+__all__ = ["degrid", "grid_adjoint", "interp_matrices",
+           "degrid_pallas", "grid_pallas", "degrid_ref", "grid_ref"]

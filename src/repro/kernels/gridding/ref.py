@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for non-Cartesian (radial) gridding/degridding.
+
+Direct per-sample bilinear interpolation on the periodic k-space grid:
+``degrid`` gathers the four corner cells around each trajectory point,
+``grid`` (the exact adjoint) scatter-adds with the same weights.  The
+Pallas kernels compute the identical operator through dense separable
+interpolation matrices; this module is the independent reference they
+are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _corners(traj, grid: int):
+    """Integer corners + fractional weights of each trajectory point on
+    the periodic grid.  traj: (S, 2) float (x, y) in grid units."""
+    t = jnp.asarray(traj, jnp.float32)
+    i0 = jnp.floor(t).astype(jnp.int32)
+    f = t - i0
+    ix0, iy0 = i0[:, 0] % grid, i0[:, 1] % grid
+    ix1, iy1 = (ix0 + 1) % grid, (iy0 + 1) % grid
+    fx, fy = f[:, 0], f[:, 1]
+    return (ix0, ix1, iy0, iy1, fx, fy)
+
+
+def degrid_ref(g, traj):
+    """Sample the Cartesian k-space at the trajectory (forward interp).
+
+    g: (J, X, Y) complex grid, traj: (S, 2) -> (J, S) complex samples.
+    """
+    grid = g.shape[-1]
+    ix0, ix1, iy0, iy1, fx, fy = _corners(traj, grid)
+    return ((1 - fx) * (1 - fy) * g[:, ix0, iy0]
+            + fx * (1 - fy) * g[:, ix1, iy0]
+            + (1 - fx) * fy * g[:, ix0, iy1]
+            + fx * fy * g[:, ix1, iy1])
+
+
+def grid_ref(y, traj, grid: int):
+    """Adjoint of ``degrid_ref``: scatter-add samples onto the grid.
+
+    y: (J, S) complex samples -> (J, X, Y) complex grid.
+    """
+    y = jnp.asarray(y)
+    ix0, ix1, iy0, iy1, fx, fy = _corners(traj, grid)
+    out = jnp.zeros(y.shape[:-1] + (grid, grid), y.dtype)
+    out = out.at[:, ix0, iy0].add(((1 - fx) * (1 - fy)) * y)
+    out = out.at[:, ix1, iy0].add((fx * (1 - fy)) * y)
+    out = out.at[:, ix0, iy1].add(((1 - fx) * fy) * y)
+    out = out.at[:, ix1, iy1].add((fx * fy) * y)
+    return out

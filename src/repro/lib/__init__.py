@@ -1,0 +1,21 @@
+"""repro.lib — ported libraries on the plan/plan-cache substrate
+(paper §4: MGPU as a framework for porting existing GPU libraries).
+
+Each port pairs operations with *plans* keyed on problem geometry +
+device group, built once and cached (LRU, hit/miss counters):
+
+  ``repro.lib.fft``       plan-cached batched/distributed 2-D FFT
+  ``repro.lib.blas``      plan-cached segmented BLAS + fused epilogues
+  ``repro.lib.gridding``  plan-cached radial gridding/degridding
+
+``repro.lib.plan`` holds the shared ``Plan``/``PlanCache`` machinery;
+``plan_stats()`` reports the default cache (the streaming engine
+surfaces it per frame).  The old ``repro.core.fft``/``repro.core.blas``
+free functions are deprecated shims over these ports.
+"""
+
+from . import blas, fft, gridding, plan
+from .plan import Plan, PlanCache, default_cache, plan_stats
+
+__all__ = ["blas", "fft", "gridding", "plan",
+           "Plan", "PlanCache", "default_cache", "plan_stats"]

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.fft import fft2 as _cfft2
+from ..lib.fft import fft2 as _cfft2
 
 
 def sobolev_weight(grid: int, s: float = 32.0, l: int = 4) -> np.ndarray:

@@ -30,24 +30,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..lib.plan import default_cache
 from .operators import sobolev_weight
 from .recon import Reconstructor, pad_channels
 
 
 @dataclasses.dataclass
 class LatencyReport:
-    """Per-frame wall-clock of one streaming run (milliseconds)."""
+    """Per-frame wall-clock of one streaming run (milliseconds), plus
+    the plan-cache evidence that the steady state builds nothing."""
 
     frame_ms: list[float]
     devices: int
     grid: int
     ncoils: int
+    # plans built while each frame was processed (library-port cache
+    # misses; frame 0 pays them all, steady-state frames must show 0)
+    frame_plan_builds: list[int] = dataclasses.field(default_factory=list)
+    plan_stats: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> dict:
         """First frame pays compilation; steady-state stats exclude it."""
         steady = self.frame_ms[1:] if len(self.frame_ms) > 1 else self.frame_ms
         arr = np.asarray(steady, dtype=np.float64)
-        return {
+        out = {
             "frames": len(self.frame_ms),
             "devices": self.devices,
             "grid": self.grid,
@@ -60,6 +66,12 @@ class LatencyReport:
             "fps": round(1e3 / max(float(arr.mean()), 1e-9), 2),
             "frame_ms": [round(t, 3) for t in self.frame_ms],
         }
+        if self.frame_plan_builds:
+            out["plan_cache"] = dict(
+                self.plan_stats,
+                frame_builds=list(self.frame_plan_builds),
+                steady_builds=int(sum(self.frame_plan_builds[1:])))
+        return out
 
     def save(self, path) -> pathlib.Path:
         path = pathlib.Path(path)
@@ -103,11 +115,14 @@ class FrameStream:
         x_ref = jax.tree.map(lambda a: a + 0, u)
         fn = rec.fn_donate_carry if self.donate_carry else rec.fn
 
-        images, frame_ms = [], []
+        cache = getattr(rec, "plan_cache", default_cache())
+        run_start = cache.snapshot()
+        images, frame_ms, frame_builds = [], [], []
         # prime the double buffer with frame 0
         buf = (rec.put_frame(y[0]), rec.put_const(np.asarray(masks[0])))
         for f in range(F):
             t0 = time.perf_counter()
+            builds0 = cache.builds
             yd, md = buf
             u, img = fn(yd, md, fov_d, w_d, u, x_ref)
             # the solver is now in flight; upload frame f+1 behind it
@@ -117,9 +132,21 @@ class FrameStream:
             x_ref = self._damp(u)
             img.block_until_ready()
             frame_ms.append((time.perf_counter() - t0) * 1e3)
+            # plans built during this frame: geometry setup (frame 0
+            # traces the solver, building its fft/frame plans); the
+            # steady state must be all hits — the report proves it.
+            frame_builds.append(cache.builds - builds0)
             images.append(img)
 
-        report = LatencyReport(frame_ms, rec.comm.size, g, J)
+        # report per-RUN counter deltas, not the process-global
+        # cumulative stats — the artifact must describe this stream.
+        end = cache.snapshot()
+        run = {k: end[k] - run_start[k] for k in ("hits", "misses", "builds")}
+        total = run["hits"] + run["misses"]
+        run["hit_rate"] = round(run["hits"] / total, 4) if total else 0.0
+        report = LatencyReport(frame_ms, rec.comm.size, g, J,
+                               frame_plan_builds=frame_builds,
+                               plan_stats=run)
         if report_path is not None:
             report.save(report_path)
         return jnp.stack(images), report

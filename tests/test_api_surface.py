@@ -124,3 +124,46 @@ def test_segmented_array_fluent_surface():
               "send_recv", "halo_exchange", "invoke", "astype", "seg_len",
               "segments", "with_data"}
     assert fluent <= _public_methods(SegmentedArray)
+
+
+# -- the repro.lib ported-library surface (paper §4) ------------------------
+
+EXPECTED_LIB_ALL = ["blas", "fft", "gridding", "plan",
+                    "Plan", "PlanCache", "default_cache", "plan_stats"]
+
+# deprecated core module-level free function -> its repro.lib replacement
+EXPECTED_LIB_SHIMS = {
+    ("fft", "fft2"): "repro.lib.fft.fft2",
+    ("fft", "fft2_batched"): "repro.lib.fft.fft2_batched",
+    ("blas", "axpy"): "repro.lib.blas.axpy",
+    ("blas", "dot"): "repro.lib.blas.dot",
+    ("blas", "norm2"): "repro.lib.blas.norm2",
+    ("blas", "gemm_batched"): "repro.lib.blas.gemm_batched",
+    ("blas", "gemm_ksplit"): "repro.lib.blas.gemm_ksplit",
+}
+
+
+def test_lib_all_snapshot():
+    import repro.lib as lib
+    assert list(lib.__all__) == EXPECTED_LIB_ALL
+    for name in EXPECTED_LIB_ALL:
+        assert hasattr(lib, name)
+
+
+def test_lib_ports_expose_plan_builders():
+    """Every ported library exposes its plan constructor(s) and the ops
+    that go through the cache (the Plan/PlanCache acceptance contract)."""
+    from repro.lib import blas, fft, gridding
+    for name in ("plan_fft2", "plan_fft2_batched", "fft2", "fft2_batched"):
+        assert callable(getattr(fft, name)), name
+    for name in ("axpy", "dot", "norm2", "gemm_batched", "gemm_ksplit",
+                 "axpy_dot", "axpy_norm2", "dot_allreduce"):
+        assert callable(getattr(blas, name)), name
+    for name in ("plan_gridding", "radial_trajectory", "ramlak_dcf_radial"):
+        assert callable(getattr(gridding, name)), name
+
+
+def test_core_lib_shim_deprecation_table():
+    for (mod, name), repl in EXPECTED_LIB_SHIMS.items():
+        fn = getattr(getattr(core, mod), name)
+        assert getattr(fn, "__deprecated__", None) == repl, (mod, name)

@@ -1,0 +1,205 @@
+"""The repro.lib plan/plan-cache substrate (paper §4 library ports):
+
+  * PlanCache behaviour: keying, LRU eviction, hit/miss counters,
+    cross-group isolation;
+  * plan-cached fft/blas correctness vs the direct math, including the
+    fused axpy+dot and dot+allreduce epilogues;
+  * the deprecated core.fft/core.blas shims warn and forward;
+  * the streaming engine's plan-cache report: frame 0 builds, steady
+    state is all hits (4-device run lives in test_gridding.py).
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Environment
+from repro.lib import blas as lblas
+from repro.lib import fft as lfft
+from repro.lib.plan import Plan, PlanCache, default_cache, group_token
+
+
+def _mk(seed=0, shape=(4, 16, 16)):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) +
+            1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+# ---------------------------------------------------------------------------
+# PlanCache mechanics
+# ---------------------------------------------------------------------------
+
+def test_cache_keying_and_hits():
+    cache = PlanCache(maxsize=8)
+    built = []
+
+    def builder(tag):
+        def b():
+            built.append(tag)
+            return Plan(key=("k", tag), fn=lambda: tag)
+        return b
+
+    p1 = cache.get_or_build(("k", "a"), builder("a"))
+    p2 = cache.get_or_build(("k", "a"), builder("a"))
+    assert p1 is p2 and built == ["a"]
+    assert (cache.hits, cache.misses) == (1, 1)
+    cache.get_or_build(("k", "b"), builder("b"))
+    assert built == ["a", "b"]
+    assert cache.stats()["hit_rate"] == pytest.approx(1 / 3, abs=1e-3)
+
+
+def test_cache_lru_eviction():
+    cache = PlanCache(maxsize=2)
+    mk = lambda k: (lambda: Plan(key=k, fn=lambda: k))
+    cache.get_or_build(("a",), mk(("a",)))
+    cache.get_or_build(("b",), mk(("b",)))
+    cache.get_or_build(("a",), mk(("a",)))     # refresh a: b becomes LRU
+    cache.get_or_build(("c",), mk(("c",)))     # evicts b
+    assert cache.evictions == 1
+    assert ("a",) in cache and ("c",) in cache and ("b",) not in cache
+    # re-requesting the evicted key rebuilds it
+    cache.get_or_build(("b",), mk(("b",)))
+    assert cache.misses == 4 and len(cache) == 2
+
+
+def test_cache_cross_group_isolation():
+    """Plans bound to different groups never collide, even for identical
+    shapes — the group token is part of every key."""
+    env = Environment()
+    c1 = env.group((1,), ("data",))
+    c2 = env.group((1,), ("model",))           # same device, different mesh
+    assert group_token(c1) != group_token(c2)
+
+    cache = PlanCache()
+    x1 = c1.container(_mk())
+    x2 = c2.container(_mk())
+    p1 = lfft.plan_fft2_batched(x1, cache=cache)
+    p2 = lfft.plan_fft2_batched(x2, cache=cache)
+    assert p1 is not p2
+    assert cache.misses == 2 and cache.hits == 0
+    # same geometry + same group -> hit
+    assert lfft.plan_fft2_batched(x1, cache=cache) is p1
+    assert cache.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# fft port
+# ---------------------------------------------------------------------------
+
+def test_fft2_plain_matches_numpy_and_caches():
+    cache = PlanCache()
+    x = _mk(1)
+    got = lfft.fft2(jnp.asarray(x), centered=True, cache=cache)
+    want = np.fft.fftshift(
+        np.fft.fft2(np.fft.ifftshift(x, axes=(-2, -1)), axes=(-2, -1),
+                    norm="ortho"), axes=(-2, -1))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+    lfft.fft2(jnp.asarray(x), centered=True, cache=cache)
+    assert cache.misses == 1 and cache.hits == 1
+
+
+def test_fft2_batched_roundtrip_segmented():
+    comm = Environment().subgroup(1)
+    x = _mk(2)
+    seg = comm.container(x)
+    k = lfft.fft2_batched(seg, centered=True)
+    back = lfft.fft2_batched(k, inverse=True, centered=True)
+    np.testing.assert_allclose(np.asarray(comm.gather(back)), x, atol=1e-4)
+
+
+def test_fft2_batched_inplane_split_matches_batch_split():
+    """A container split inside the transform plane (transpose
+    algorithm) must equal the batch-split result."""
+    comm = Environment().subgroup(1)
+    x = _mk(3)
+    want = lfft.fft2_batched(comm.container(x), centered=True)
+    got = lfft.fft2_batched(comm.container(x, dim=1), centered=True)
+    np.testing.assert_allclose(np.asarray(comm.gather(got)),
+                               np.asarray(comm.gather(want)), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blas port (fused epilogues)
+# ---------------------------------------------------------------------------
+
+def test_blas_axpy_dot_fused_matches_split():
+    comm = Environment().subgroup(1)
+    x, y = comm.container(_mk(4)), comm.container(_mk(5))
+    w, d = lblas.axpy_dot(2.0 - 1.0j, x, y, y)
+    w_ref = lblas.axpy(2.0 - 1.0j, x, y)
+    np.testing.assert_allclose(np.asarray(w.data), np.asarray(w_ref.data),
+                               atol=1e-5)
+    np.testing.assert_allclose(
+        complex(d), complex(jnp.vdot(y.data, w_ref.data)), rtol=1e-5)
+    w2, n = lblas.axpy_norm2(-0.5, x, y)
+    np.testing.assert_allclose(
+        float(n), float(jnp.real(jnp.vdot(w2.data, w2.data))), rtol=1e-5)
+
+
+def test_blas_dot_allreduce_matches_vdot():
+    comm = Environment().subgroup(1)
+    x, y = comm.container(_mk(6)), comm.container(_mk(7))
+    got = lblas.dot_allreduce(x, y)
+    np.testing.assert_allclose(complex(got),
+                               complex(jnp.vdot(x.data, y.data)), rtol=1e-4)
+
+
+def test_blas_gemm_plans():
+    comm = Environment().subgroup(1)
+    cache = PlanCache()
+    a = np.random.default_rng(8).standard_normal((4, 5, 6)).astype(np.float32)
+    b = np.random.default_rng(9).standard_normal((4, 6, 7)).astype(np.float32)
+    got = lblas.gemm_batched(comm.container(a), comm.container(b),
+                             cache=cache)
+    np.testing.assert_allclose(np.asarray(comm.gather(got)), a @ b,
+                               atol=1e-4)
+    lblas.gemm_batched(comm.container(a), comm.container(b), cache=cache)
+    assert cache.hits == 1   # second call reuses the plan
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_core_fft_blas_shims_warn_and_forward():
+    from repro.core import blas as cblas
+    from repro.core import fft as cfft
+    comm = Environment().subgroup(1)
+    x, y = comm.container(_mk(10)), comm.container(_mk(11))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        z = cblas.axpy(2.0, x, y)
+        k = cfft.fft2_batched(x, centered=True)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    np.testing.assert_allclose(np.asarray(z.data),
+                               2.0 * np.asarray(x.data) + np.asarray(y.data),
+                               atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(k.data),
+        np.asarray(lfft.fft2_batched(x, centered=True).data), atol=1e-6)
+    for name in ("axpy", "dot", "norm2", "gemm_batched", "gemm_ksplit"):
+        assert getattr(cblas, name).__deprecated__ == f"repro.lib.blas.{name}"
+    for name in ("fft2", "fft2_batched"):
+        assert getattr(cfft, name).__deprecated__ == f"repro.lib.fft.{name}"
+
+
+# ---------------------------------------------------------------------------
+# the streaming engine's plan-cache report (1-device; 4-device in
+# test_gridding.py rides the subprocess payload)
+# ---------------------------------------------------------------------------
+
+def test_stream_reports_zero_steady_state_builds():
+    from repro.nlinv import phantom
+    from repro.nlinv.recon import Reconstructor
+    from repro.nlinv.stream import FrameStream
+    d = phantom.make_dataset(n=16, ncoils=2, nspokes=5, frames=3, seed=3)
+    rec = Reconstructor(newton=2, cg_iters=4, channel_sum="full")
+    _, rep = FrameStream(rec).run(d["y"], d["masks"], d["fov"])
+    s = rep.summary()
+    pc = s["plan_cache"]
+    assert len(pc["frame_builds"]) == 3
+    assert pc["steady_builds"] == 0, pc
+    assert all(b == 0 for b in pc["frame_builds"][1:]), pc
+    assert pc["hit_rate"] > 0
