@@ -1,58 +1,12 @@
-"""Paper Fig. 4: FFT / aX+Y / A.B over 12 complex square matrices,
-1-8 devices.
+"""Paper Fig. 4 (FFT / aX+Y / A.B) — thin CLI over the registered
+scenarios in ``repro.bench.suites.fig4``.
 
-Measured: us_per_call of the segmented implementations (single shard).
-Derived: modeled parallel efficiency at 2/4/8 devices — FFT and aXPY are
-embarrassingly batch-parallel (efficiency ~1); A.B with the contracted
-dim split pays one inter-device reduction (the paper's finding that A.B
-does not strong-scale).
+  PYTHONPATH=src python -m benchmarks.fig4_algorithms [--size ...] [--devices ...]
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.bench.cli import figure_main
 
-from repro.core import Environment, Policy, blas, fft
-from repro.core.runtime import HW
+main = figure_main("fig4")
 
-from .common import allreduce_time, fmt_row, time_fn
-
-
-def rows(quick=False):
-    comm = Environment().subgroup(1)
-    out = []
-    sizes = [128, 256] if quick else [128, 256, 512]
-    for n in sizes:
-        batch = 12                               # paper: 12 matrices
-        x = (np.random.randn(batch, n, n) +
-             1j * np.random.randn(batch, n, n)).astype(np.complex64)
-        y = x[..., ::-1].copy()
-        sx, sy = comm.container(x), comm.container(y)
-
-        f = jax.jit(lambda a: fft.fft2_batched(
-            fft.fft2_batched(a), inverse=True).data)
-        us = time_fn(f, sx)
-        # per-device batch shrinks with G; no communication
-        eff = {G: 1.0 for G in (2, 4, 8)}
-        out.append(fmt_row(f"fig4_fft_fwdinv_n{n}", us,
-                           "eff2=1.00;eff4=1.00;eff8=1.00"))
-
-        a = jax.jit(lambda u, v: blas.axpy(2.0 + 1j, u, v).data)
-        us = time_fn(a, sx, sy)
-        out.append(fmt_row(f"fig4_axpy_n{n}", us,
-                           "eff2=1.00;eff4=1.00;eff8=1.00"))
-
-        A = np.random.randn(n, n).astype(np.float32)
-        B = np.random.randn(n, n).astype(np.float32)
-        sA = comm.container(A, dim=1)
-        sB = comm.container(B, dim=0)
-        m = jax.jit(lambda u, v: blas.gemm_ksplit(u, v).data)
-        us = time_fn(m, sA, sB)
-        # modeled: local matmul scales 1/G, then psum of the full (n,n)
-        t1 = 2 * n ** 3 / HW["peak_flops_bf16"]
-        effs = []
-        for G in (2, 4, 8):
-            tG = t1 / G + allreduce_time(n * n * 4, G)
-            effs.append(f"eff{G}={t1 / (G * tG):.2f}")
-        out.append(fmt_row(f"fig4_gemm_ksplit_n{n}", us, ";".join(effs)))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,56 +1,12 @@
-"""Paper Fig. 5: transfer primitives — strong copy, weak copy,
-broadcast, reduce.
+"""Paper Fig. 5 (transfer primitives) — thin CLI over the registered
+scenarios in ``repro.bench.suites.fig5``.
 
-Measured: wall time of the verb on this host (1 device).  Derived:
-modeled v5e times (host->HBM over PCIe for scatter; ICI ring for
-reduce) at 1/2/4/8 devices, showing the paper's effects: strong copy
-gets FASTER with more devices (parallel PCIe paths), reduce efficiency
-decays with P2P hops.
+  PYTHONPATH=src python -m benchmarks.fig5_transfers [--size ...] [--devices ...]
 """
 
-import numpy as np
+from repro.bench.cli import figure_main
 
-from repro.core import Environment
-from repro.core.runtime import HW
+main = figure_main("fig5")
 
-from .common import allreduce_time, copy_time, fmt_row, time_fn
-
-PCIE_BW = 16e9          # host->device, per path (the paper's 8-GPU box
-                        # has multiple independent PCIe pathways)
-
-
-def rows(quick=False):
-    comm = Environment().subgroup(1)
-    out = []
-    n = 256 if quick else 512
-    batch = 8
-    x = (np.random.randn(batch, n, n) + 1j *
-         np.random.randn(batch, n, n)).astype(np.complex64)
-    nbytes = x.nbytes
-
-    us = time_fn(lambda: comm.container(x).data)
-    der = ";".join(
-        f"t{G}={copy_time(nbytes / G, PCIE_BW) * 1e6:.0f}us"
-        for G in (1, 2, 4, 8))
-    out.append(fmt_row(f"fig5_strong_copy_{batch}x{n}", us, der))
-
-    us = time_fn(lambda: comm.container(x[:1]).data)   # per-device constant
-    der = ";".join(
-        f"t{G}={copy_time(nbytes / batch, PCIE_BW) * 1e6:.0f}us"
-        for G in (1, 2, 4, 8))
-    out.append(fmt_row(f"fig5_weak_copy_1x{n}", us, der))
-
-    us = time_fn(lambda: comm.bcast(x[0]).data)
-    one = x[0].nbytes
-    der = ";".join(
-        f"t{G}={(copy_time(one, PCIE_BW) + (G - 1) * one / HW['ici_bw']) * 1e6:.0f}us"
-        for G in (1, 2, 4, 8))
-    out.append(fmt_row(f"fig5_broadcast_{n}", us, der))
-
-    sm = comm.container(x)
-    us = time_fn(lambda: comm.reduce(sm))
-    der = ";".join(
-        f"t{G}={(allreduce_time(one, G) / 2 + copy_time(one, PCIE_BW)) * 1e6:.0f}us"
-        for G in (1, 2, 4, 8))
-    out.append(fmt_row(f"fig5_reduce_{n}", us, der))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

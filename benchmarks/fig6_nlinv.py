@@ -1,142 +1,13 @@
-"""Paper Fig. 6 (+Fig. 7): NLINV frames/sec vs (#devices, #channels,
-matrix size), and energy per frame.
+"""Paper Fig. 6/7 (NLINV frame rate, paper-claims validation) plus the
+streaming latency and gridding-plan scenarios that share its problem —
+thin CLI over ``repro.bench.suites.{fig6,stream,gridding}``.
 
-Measured: single-device frames/sec on CPU at reduced grid sizes.
-Derived: the calibrated speedup model at 1-4 devices.  Model terms per
-CG-dominated frame (paper §3.2): FFT+pointwise scale 1/G; the Sum rho_g
-all-reduce grows with G (P2P ring); beyond 4 GPUs the paper's box loses
-direct P2P (cross-IOH) — on TPU the analogue is leaving the ICI domain.
-Validated against the paper's claims: speedup ~1.7 @ 2 GPUs, ~2.1 @ 4.
+  PYTHONPATH=src python -m benchmarks.fig6_nlinv [--size ...] [--devices ...]
 """
 
-import pathlib
-import time
+from repro.bench.cli import figure_main
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+main = figure_main("fig6,stream,gridding")
 
-from repro.core import Environment
-from repro.core.runtime import HW
-from repro.nlinv import phantom
-from repro.nlinv.recon import Reconstructor, reconstruct_frame
-from repro.nlinv.stream import FrameStream
-from repro.nlinv.operators import sobolev_weight, uinit
-
-from .common import PAPER_HW, allreduce_time, fmt_row
-
-LATENCY_ARTIFACT = pathlib.Path(__file__).parent / "out" / \
-    "nlinv_stream_latency.json"
-
-
-def speedup_model(grid: int, J: int, newton=7, cg_iters=6, hw="paper",
-                  crop=True):
-    """Modeled speedup for G devices, calibrated on op counts.
-
-    hw="paper": GTX-580/PCIe constants -> validates the paper's claims.
-    hw="v5e":   TPU constants -> our adaptation's scaling.
-    Per CG iteration: DF + DF^H = 6 FFT batches over the J local
-    channels + ~9 pointwise passes + 1 all-reduce of rho (cropped FOV
-    quarter when ``crop``); ~7% non-scaling CG overhead (scalar products
-    + host sync, per the paper's CG row of Table 1)."""
-    if hw == "paper":
-        peak, bw, p2p, lat = (PAPER_HW["peak_flops"], PAPER_HW["mem_bw"],
-                              PAPER_HW["p2p_bw"], PAPER_HW["latency"])
-    else:
-        peak, bw, p2p, lat = (HW["peak_flops_bf16"], HW["hbm_bw"],
-                              HW["ici_bw"], 1e-6)
-    flop_fft = 2 * 5 * grid * grid * np.log2(grid * grid)   # per channel
-    bytes_img = grid * grid * 8                             # complex64
-    t_fft = 3 * J * flop_fft / peak
-    t_pw = 9 * J * bytes_img / bw
-    t_serial = 0.07 * (t_fft + t_pw)
-    ar_bytes = bytes_img // 4 if crop else bytes_img
-    out = {}
-    t1 = t_fft + t_pw + t_serial
-    for G in (1, 2, 3, 4, 8):
-        t_comp = (t_fft + t_pw) / G
-        t_ar = allreduce_time(ar_bytes, G, bw=p2p, latency=lat) \
-            if G > 1 else 0.0
-        if hw == "paper":
-            if G >= 4:
-                t_ar *= G / 2.0     # shared PCIe switches: ring contention
-                                    # (paper Fig.9: DF^H slows at 4 GPUs)
-            if G > 4:
-                t_ar *= 3.0         # cross-IOH: host-staged, no P2P
-        out[G] = t1 / (t_comp + t_ar + t_serial)
-    return out
-
-
-def rows(quick=False):
-    out = []
-    sizes = [(32, 4)] if quick else [(32, 4), (48, 8), (64, 8), (64, 12)]
-    for n, J in sizes:
-        d = phantom.make_dataset(n=n, ncoils=J, nspokes=11, frames=1)
-        g = d["grid"]
-        w = jnp.asarray(sobolev_weight(g))
-        u0 = uinit(J, g)
-        args = (jnp.asarray(d["y"][0]), jnp.asarray(d["masks"][0]),
-                jnp.asarray(d["fov"]), w, u0, u0)
-        # warm + timed
-        ufin, img = reconstruct_frame(*args, newton=6, cg_iters=10)
-        jax.block_until_ready(img)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            _, img = reconstruct_frame(*args, newton=6, cg_iters=10)
-        jax.block_until_ready(img)
-        dt = (time.perf_counter() - t0) / 3
-        fps = 1.0 / dt
-        sp = speedup_model(g, J)                      # paper hardware
-        sv = speedup_model(g, J, hw="v5e")
-        der = (f"fps1={fps:.2f};paper_s2={sp[2]:.2f};paper_s3={sp[3]:.2f};"
-               f"paper_s4={sp[4]:.2f};v5e_s4={sv[4]:.2f}")
-        out.append(fmt_row(f"fig6_nlinv_g{g}_J{J}", dt * 1e6, der))
-    # streaming real-time engine: steady-state per-frame latency + jitter
-    # (frame f+1 upload overlapped with frame f compute, carry donated);
-    # the report artifact is the recon-service SLO evidence.
-    d = phantom.make_dataset(n=32, ncoils=4, nspokes=11,
-                             frames=2 if quick else 5)
-    rec = Reconstructor(Environment().subgroup(1), newton=6, cg_iters=10,
-                        channel_sum="crop")
-    _, rep = FrameStream(rec, damping=0.9).run(
-        d["y"], d["masks"], d["fov"], report_path=LATENCY_ARTIFACT)
-    s = rep.summary()
-    pc = s.get("plan_cache", {})
-    out.append(fmt_row(
-        f"fig6_stream_g{d['grid']}_J4", s["mean_ms"] * 1e3,
-        f"fps={s['fps']:.2f};p95_ms={s['p95_ms']:.2f};"
-        f"jitter_ms={s['jitter_ms']:.2f};artifact={LATENCY_ARTIFACT.name}"))
-    # plan-cache latency column: frame 0 pays every plan build (geometry
-    # setup), the steady-state frames are pure cache hits — the library-
-    # port win for the real-time loop (first_frame vs steady mean).
-    out.append(fmt_row(
-        f"fig6_plan_latency_g{d['grid']}_J4", s["first_frame_ms"] * 1e3,
-        f"steady_ms={s['mean_ms']:.2f};builds_f0={pc.get('frame_builds', [0])[0]};"
-        f"steady_builds={pc.get('steady_builds', -1)};"
-        f"hit_rate={pc.get('hit_rate', 0.0)}"))
-    # geometry (gridding plan) setup cost vs a cache hit: what per-frame
-    # re-planning would add to the latency budget at this problem size.
-    import time as _time
-    from repro.lib.gridding import plan_gridding, radial_trajectory
-    traj = radial_trajectory(d["grid"], 11)
-    t0 = _time.perf_counter()
-    plan_gridding(traj, d["grid"])              # cold: builds matrices
-    t_cold = (_time.perf_counter() - t0) * 1e6
-    t0 = _time.perf_counter()
-    plan_gridding(traj, d["grid"])              # warm: LRU hit
-    t_hit = (_time.perf_counter() - t0) * 1e6
-    out.append(fmt_row("fig6_gridding_plan_us", t_cold,
-                       f"cache_hit={t_hit:.1f}us;speedup={t_cold / max(t_hit, 1e-9):.0f}x"))
-    # paper-claims validation at the paper's own problem size
-    # (grid 768 = 2x384, J=8; claims: ~1.7x @ 2 GPUs, ~2.1x @ 4)
-    sp = speedup_model(768, 8)
-    out.append(fmt_row(
-        "fig6_paper_claims_g768_J8", 0.0,
-        f"paper_s2={sp[2]:.2f}(claim~1.7);paper_s4={sp[4]:.2f}(claim~2.1);"
-        f"paper_s8={sp[8]:.2f}(cross-IOH)"))
-    # fig7: energy/frame model — chips busy/speedup tradeoff
-    for G in (1, 2, 4):
-        j_per_frame = G * 200.0 / (sp[G])
-        out.append(fmt_row(f"fig7_energy_model_G{G}", 0.0,
-                           f"rel_J_per_frame={j_per_frame / 200.0:.2f}"))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

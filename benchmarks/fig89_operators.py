@@ -1,61 +1,12 @@
-"""Paper Fig. 8/9: DF and DF^H runtime vs channel count; FFT batch
-scaling vs the all-reduce cost that erodes DF^H beyond 2 devices.
+"""Paper Fig. 8/9 (DF / DF^H / FFT batch scaling) — thin CLI over the
+registered scenarios in ``repro.bench.suites.fig89``.
 
-Measured: DF / DF^H / batched-FFT wall time at 8..12 channels.
-Derived: modeled multi-device times showing the paper's crossover (the
-all-reduce share grows with G — execution time of DF^H can *increase*
-at G=4, paper Fig. 8 right).
+  PYTHONPATH=src python -m benchmarks.fig89_operators [--size ...] [--devices ...]
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.bench.cli import figure_main
 
-from repro.core.runtime import HW
-from repro.nlinv import phantom
-from repro.nlinv.operators import make_ops, sobolev_weight, uinit
+main = figure_main("fig89")
 
-from .common import allreduce_time, fmt_row, time_fn
-
-
-def rows(quick=False):
-    out = []
-    n = 64 if quick else 96
-    channels = [8] if quick else [8, 10, 12]
-    for J in channels:
-        d = phantom.make_dataset(n=n, ncoils=J, nspokes=11, frames=1)
-        g = d["grid"]
-        ops = make_ops(d["masks"][0], d["fov"], sobolev_weight(g))
-        u0 = uinit(J, g)
-        du = jax.tree.map(lambda x: x + 0.1, u0)
-        r = jnp.asarray(d["y"][0])
-
-        us_df = time_fn(jax.jit(lambda a, b: ops.DG(a, b)), u0, du)
-        us_dfh = time_fn(jax.jit(lambda a, b: ops.DGH(a, b)), u0, r)
-
-        flop_fft = 5 * g * g * np.log2(g * g)
-        t_fft1 = 3 * J * flop_fft / HW["peak_flops_bf16"]
-        img_b = g * g * 8
-        der = []
-        for G in (1, 2, 4):
-            t_dfh = t_fft1 / G + allreduce_time(img_b // 4, G)
-            der.append(f"tDFH{G}={t_dfh * 1e6:.1f}us")
-        out.append(fmt_row(f"fig8_DF_J{J}_g{g}", us_df, "scales=1/G"))
-        out.append(fmt_row(f"fig8_DFH_J{J}_g{g}", us_dfh, ";".join(der)))
-
-    # fig9: FFT batch scaling + all-reduce vs matrix size
-    for size in ([128] if quick else [128, 256]):
-        batch = 8
-        x = (np.random.randn(batch, size, size) + 1j *
-             np.random.randn(batch, size, size)).astype(np.complex64)
-        from repro.core import Environment
-        from repro.lib import fft as lfft
-        comm = Environment().subgroup(1)
-        sx = comm.container(x)
-        plan = lfft.plan_fft2_batched(sx)       # built once per geometry
-        us = time_fn(lambda a: plan(a).data, sx)
-        ar = {G: allreduce_time(size * size * 8, G) * 1e6 for G in (2, 4)}
-        out.append(fmt_row(
-            f"fig9_fft_batch{batch}_n{size}", us,
-            f"ar2={ar[2]:.1f}us;ar4={ar[4]:.1f}us"))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

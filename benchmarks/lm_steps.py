@@ -1,64 +1,13 @@
-"""Per-architecture step benchmarks (reduced configs, CPU): one train
-step and one decode step for every assigned arch.  The derived column
-carries the single-pod roofline bound from the dry-run (if present)."""
+"""Per-architecture LM train/decode steps — thin CLI over the
+registered scenarios in ``repro.bench.suites.lm`` (paper-size only;
+opt-in, not part of the CI sweep).
 
-import dataclasses
-import json
-import pathlib
+  PYTHONPATH=src python -m benchmarks.lm_steps --size paper
+"""
 
-import jax
-import jax.numpy as jnp
+from repro.bench.cli import figure_main
 
-from repro.configs import ARCH_IDS, get_smoke
-from repro.core import compat
-from repro.models import frontends, transformer
-from repro.train import make_train_state, make_train_step
+main = figure_main("lm")
 
-from .common import fmt_row, time_fn
-
-RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results/dryrun"
-
-
-def _derived(arch, shape):
-    fn = RESULTS / f"{arch}__{shape}__pod16x16.json"
-    if not fn.exists():
-        return "dryrun=pending"
-    d = json.loads(fn.read_text())
-    if "skipped" in d:
-        return "skipped"
-    r = d["roofline"]
-    return (f"bound={r['dominant']};step_bound_ms="
-            f"{r['step_time_bound_s'] * 1e3:.1f}")
-
-
-def rows(quick=False):
-    out = []
-    archs = ARCH_IDS[:3] if quick else ARCH_IDS
-    for arch in archs:
-        cfg = dataclasses.replace(get_smoke(arch), compute_dtype="float32")
-        mesh = compat.make_mesh((1,), ("data",))
-        state = make_train_state(cfg, jax.random.PRNGKey(0))
-        step_fn, _ = make_train_step(cfg, mesh, remat=False, donate=False)
-        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
-                                 cfg.vocab)
-        enc = frontends.synthetic_frontend(cfg, 2)
-        with mesh:
-            jstep = jax.jit(step_fn)
-            us = time_fn(jstep, state, tok, tok, enc, iters=3)
-        out.append(fmt_row(f"lm_train_{arch}", us,
-                           _derived(arch, "train_4k")))
-
-        params = state["params"]
-        cache = transformer.init_cache(cfg, 2, 64, cfg.cdtype)
-        _, cache, _ = transformer.apply(cfg, params, tok[:, :16], enc=enc,
-                                        mode="prefill", pos=0, cache=cache)
-
-        @jax.jit
-        def dec(p, c, t, pos):
-            lg, c2, _ = transformer.apply(cfg, p, t, mode="decode",
-                                          pos=pos, cache=c)
-            return lg, c2
-        us = time_fn(dec, params, cache, tok[:, :1], 16, iters=3)
-        out.append(fmt_row(f"lm_decode_{arch}", us,
-                           _derived(arch, "decode_32k")))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

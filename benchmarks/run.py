@@ -1,46 +1,13 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Thin forwarder — the benchmark harness lives in ``repro.bench``.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+  PYTHONPATH=src python -m benchmarks.run [--size tiny|paper]
+      [--devices 1,4] [--only fig4,...] [--out BENCH_paper.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.  Measured numbers are CPU
-wall-clock of the real implementations; ``derived`` columns carry the
-calibrated TPU-v5e model terms / dry-run roofline bounds (DESIGN.md §7).
+(kept for muscle memory; ``python -m repro.bench.run`` is identical,
+and ``--quick`` still means ``--size tiny``.)
 """
 
-import argparse
-import sys
-import traceback
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
-
-    from . import (fig4_algorithms, fig5_transfers, fig6_nlinv,
-                   fig89_operators, lm_steps, table1_operators)
-    modules = {
-        "fig4": fig4_algorithms, "fig5": fig5_transfers,
-        "table1": table1_operators, "fig6": fig6_nlinv,
-        "fig89": fig89_operators, "lm": lm_steps,
-    }
-    picks = args.only.split(",") if args.only else list(modules)
-
-    print("name,us_per_call,derived")
-    failed = []
-    for key in picks:
-        try:
-            for row in modules[key].rows(quick=args.quick):
-                print(row)
-                sys.stdout.flush()
-        except Exception:
-            failed.append(key)
-            traceback.print_exc()
-    if failed:
-        print(f"FAILED benches: {failed}", file=sys.stderr)
-        raise SystemExit(1)
-
+from repro.bench.run import main
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,93 +1,13 @@
-"""Paper Table 1: operator breakdown of F, DF, DF^H, CG.
+"""Paper Table 1 (operator breakdown, op-count asserts, fused-epilogue
+rows) — thin CLI over the registered scenarios in
+``repro.bench.suites.table1``.
 
-Asserts the structural op counts of our implementation match the paper's
-table (FFT batches / pointwise ops / channel sums / scalar products /
-all-reduces per operator), then times each operator at a realistic
-problem size (grid 256, J=8 — the paper's 8-channel compressed setting).
+  PYTHONPATH=src python -m benchmarks.table1_operators [--size ...] [--devices ...]
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.bench.cli import figure_main
 
-from repro.nlinv import phantom
-from repro.nlinv.operators import make_ops, sobolev_weight, uinit
+main = figure_main("table1")
 
-from .common import fmt_row, time_fn
-
-# paper Table 1 (ours: FFT batches per operator; DG/DGH include the coil
-# transform W; the all-reduce column is the distributed channel sum)
-EXPECTED = {
-    "F": dict(fft=2, channel_sum=0, allreduce=0),
-    "DF": dict(fft=3, channel_sum=0, allreduce=0),
-    "DFH": dict(fft=3, channel_sum=1, allreduce=1),
-    "CG": dict(scalar_products=2),
-}
-
-
-def _count_ffts(fn, *args):
-    def rec(jaxpr):
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "fft":
-                n += 1
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
-                    n += rec(v.jaxpr)
-                elif hasattr(v, "eqns"):
-                    n += rec(v)
-        return n
-    return rec(jax.make_jaxpr(fn)(*args).jaxpr)
-
-
-def rows(quick=False):
-    n = 64 if quick else 128
-    d = phantom.make_dataset(n=n, ncoils=8, nspokes=11, frames=1)
-    ops = make_ops(d["masks"][0], d["fov"], sobolev_weight(d["grid"]))
-    J, g = d["ncoils"], d["grid"]
-    u0 = uinit(J, g)
-    du = jax.tree.map(lambda x: x + 0.1, u0)
-    r = jnp.asarray(d["y"][0])
-
-    assert _count_ffts(ops.G, u0) == 2 + EXPECTED["F"]["fft"] - 2
-    assert _count_ffts(lambda a, b: ops.DG(a, b), u0, du) == \
-        EXPECTED["DF"]["fft"]
-    assert _count_ffts(lambda a, b: ops.DGH(a, b), u0, r) == \
-        EXPECTED["DFH"]["fft"]
-
-    out = []
-    fG = jax.jit(lambda u: ops.G(u))
-    out.append(fmt_row(f"table1_F_g{g}_J{J}", time_fn(fG, u0),
-                       "fft=2;pointwise=4"))
-    fDG = jax.jit(lambda u, v: ops.DG(u, v))
-    out.append(fmt_row(f"table1_DF_g{g}_J{J}", time_fn(fDG, u0, du),
-                       "fft=3;pointwise=5"))
-    fDGH = jax.jit(lambda u, v: ops.DGH(u, v))
-    out.append(fmt_row(f"table1_DFH_g{g}_J{J}", time_fn(fDGH, u0, r),
-                       "fft=3;pointwise=4;channel_sum=1;allreduce=1"))
-    # CG iteration: normal op + 2 scalar products + 3 axpys
-    from repro.nlinv.operators import udot, uaxpy
-    def cg_iter(u, v):
-        Ap = ops.normal(u, v, 0.5)
-        a = jnp.real(udot(v, Ap))
-        return uaxpy(1.0 / (a + 1.0), Ap, v)
-    out.append(fmt_row(f"table1_CGiter_g{g}_J{J}",
-                       time_fn(jax.jit(cg_iter), u0, du),
-                       "ab=6;scalar_products=2"))
-
-    # libblas port: the CG residual update as the fused axpy+dot plan
-    # (one pass over w) vs the two-plan form — both plan-cache-hit warm.
-    from repro.core import Environment
-    from repro.lib import blas as lblas, plan_stats
-    comm = Environment().subgroup(1)
-    sx = comm.container(jnp.asarray(d["y"][0]))
-    sy = comm.container(jnp.asarray(d["y"][0]) * 0.5)
-    us_fused = time_fn(lambda: lblas.axpy_norm2(-0.25, sx, sy)[1])
-    us_split = time_fn(lambda: lblas.norm2(lblas.axpy(-0.25, sx, sy)))
-    out.append(fmt_row(f"table1_axpynorm2_fused_g{g}_J{J}", us_fused,
-                       f"split={us_split:.1f}us"))
-    s = plan_stats()
-    out.append(fmt_row("table1_plan_cache", 0.0,
-                       f"hits={s['hits']};builds={s['builds']};"
-                       f"hit_rate={s['hit_rate']}"))
-    return out
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""repro.bench — the unified benchmark subsystem.
+
+The paper's headline result is quantitative (1.7x @ 2 GPUs, 2.1x @ 4
+for real-time NLINV); this package makes the repo's own performance
+trajectory machine-readable the way the 2017 follow-up paper demands:
+
+  ``harness``    warmup-disciplined, ``block_until_ready``-fenced timing
+                 with compile/plan-build cost separated from the steady
+                 state (and the plan-cache counter deltas to prove it)
+  ``registry``   every paper figure/table as a registered scenario,
+                 parameterized over problem size {tiny, paper} and
+                 device count {1, 2, 4 simulated}
+  ``models``     the calibrated alpha-beta/roofline models behind every
+                 derived column
+  ``artifact``   schema-versioned ``BENCH_paper.json`` writer/validator
+  ``compare``    artifact diff + CI regression gate (non-zero exit)
+  ``run``        the sweep driver (one subprocess per device count)
+
+CLI:  ``python -m repro.bench.run`` / ``python -m repro.bench.compare``;
+the ``benchmarks/*.py`` scripts are thin entry points over the same
+registry.  See docs/benchmarks.md for the methodology.
+"""
+
+from importlib import import_module
+
+from . import registry
+from .registry import Scenario, scenario, scenarios
+
+__all__ = [
+    "artifact", "compare", "harness", "models", "registry",
+    "SCHEMA_VERSION", "ArtifactError", "load_artifact", "make_artifact",
+    "run_key", "validate_artifact", "write_artifact",
+    "Comparison", "compare_artifacts",
+    "BenchContext", "Timing", "measure",
+    "Scenario", "scenario", "scenarios",
+]
+
+# Everything except the registry resolves lazily (PEP 562):
+#   * harness/models pull jax (and the nlinv latency machinery) — the
+#     artifact/compare tooling must stay importable on any host;
+#   * artifact/compare must not be imported at package level so
+#     `python -m repro.bench.compare` (the CI gate) runs without the
+#     runpy found-in-sys.modules RuntimeWarning.
+_LAZY_MODULES = ("artifact", "compare", "harness", "models")
+_LAZY_NAMES = {
+    "SCHEMA_VERSION": "artifact", "ArtifactError": "artifact",
+    "load_artifact": "artifact", "make_artifact": "artifact",
+    "run_key": "artifact", "validate_artifact": "artifact",
+    "write_artifact": "artifact",
+    "Comparison": "compare", "compare_artifacts": "compare",
+    "BenchContext": "harness", "Timing": "harness", "measure": "harness",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY_MODULES:
+        mod = import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    if name in _LAZY_NAMES:
+        obj = getattr(import_module(f".{_LAZY_NAMES[name]}", __name__), name)
+        globals()[name] = obj
+        return obj
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,146 @@
+"""Diff two benchmark artifacts and gate steady-state regressions.
+
+  PYTHONPATH=src python -m repro.bench.compare BASE.json NEW.json \\
+      [--threshold 25] [--min-ms 0.01] [--fail-on-missing]
+
+Exit status is non-zero iff a regression is found: a scenario present in
+both artifacts whose steady-state per-call cost grew by more than
+``--threshold`` percent over ``max(base, --min-ms)``.  When both
+artifacts carry the ``calibration_ms`` machine-speed reference
+(``harness.calibrate``, stamped by the sweep runner), the new steady
+states are first scaled by ``base_cal / new_cal`` so a uniformly
+slower/faster host (cgroup neighbors, different runner) cancels out and
+only code-induced slowdowns remain.  Clamping the base
+up to the floor means sub-floor rows (scheduler jitter territory;
+model-only rows report 0.0) cannot flake the gate on noise — but they
+still fail once the new cost clears threshold above the floor itself,
+so a sub-floor baseline never exempts a real regression.  New scenarios
+pass (the trajectory is supposed to grow); scenarios that disappeared
+are reported and fail only under ``--fail-on-missing``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from .artifact import load_artifact
+
+DEFAULT_THRESHOLD_PCT = 25.0
+DEFAULT_MIN_MS = 0.01
+
+
+@dataclasses.dataclass
+class Comparison:
+    """Outcome of diffing two artifacts (lists of per-scenario entries)."""
+
+    regressions: list
+    improvements: list
+    unchanged: list
+    below_floor: list    # skipped: steady state under the noise floor
+    new: list            # keys only in the new artifact
+    missing: list        # keys only in the base artifact
+    threshold_pct: float
+    min_ms: float
+    scale: float = 1.0   # machine-speed normalization applied to `new`
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+
+def compare_artifacts(base: dict, new: dict, *,
+                      threshold_pct: float = DEFAULT_THRESHOLD_PCT,
+                      min_ms: float = DEFAULT_MIN_MS) -> Comparison:
+    """Diff two (already validated) artifacts; see module docstring."""
+    b, n = base["scenarios"], new["scenarios"]
+    # normalize by relative machine speed when both artifacts carry the
+    # calibration reference: neighbor contention on a shared host slows
+    # the reference and every scenario together (the ratio cancels it),
+    # while a genuine code regression moves only the scenario.
+    bc, nc = base.get("calibration_ms"), new.get("calibration_ms")
+    scale = bc / nc if bc and nc else 1.0
+    cmp = Comparison([], [], [], [], [], [],
+                     threshold_pct=threshold_pct, min_ms=min_ms,
+                     scale=round(scale, 4))
+    for key in sorted(set(b) | set(n)):
+        if key not in n:
+            cmp.missing.append(key)
+            continue
+        if key not in b:
+            cmp.new.append(key)
+            continue
+        bs = b[key]["steady_ms"]
+        ns = round(n[key]["steady_ms"] * scale, 6)
+        entry = {"key": key, "base_ms": bs, "new_ms": ns,
+                 "raw_new_ms": n[key]["steady_ms"],
+                 "ratio": round(ns / bs, 3) if bs > 0 else None}
+        # a sub-floor BASE must not exempt an unbounded regression: the
+        # base is clamped up to the floor, so a noise-floor row fails
+        # only once its new cost clears threshold above the floor itself
+        if bs < min_ms and ns < min_ms:
+            cmp.below_floor.append(entry)
+        elif ns > max(bs, min_ms) * (1.0 + threshold_pct / 100.0):
+            cmp.regressions.append(entry)
+        elif bs >= min_ms and ns < bs * (1.0 - threshold_pct / 100.0):
+            cmp.improvements.append(entry)
+        else:
+            cmp.unchanged.append(entry)
+    return cmp
+
+
+def format_report(cmp: Comparison) -> str:
+    lines = [f"repro.bench.compare: threshold +{cmp.threshold_pct:g}% "
+             f"steady-state, noise floor {cmp.min_ms:g} ms, "
+             f"machine-speed scale {cmp.scale:g}x"]
+    for entry in cmp.regressions:
+        lines.append(f"  REGRESSION {entry['key']}: "
+                     f"{entry['base_ms']:g} -> {entry['new_ms']:g} ms "
+                     f"({entry['ratio']}x)")
+    for entry in cmp.improvements:
+        lines.append(f"  improved   {entry['key']}: "
+                     f"{entry['base_ms']:g} -> {entry['new_ms']:g} ms "
+                     f"({entry['ratio']}x)")
+    for key in cmp.new:
+        lines.append(f"  new        {key}")
+    for key in cmp.missing:
+        lines.append(f"  MISSING    {key} (in base, not in new)")
+    lines.append(
+        f"  {len(cmp.unchanged)} unchanged, "
+        f"{len(cmp.below_floor)} under the noise floor, "
+        f"{len(cmp.improvements)} improved, {len(cmp.new)} new, "
+        f"{len(cmp.missing)} missing, {len(cmp.regressions)} regressions")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.bench.compare",
+        description="diff two BENCH artifacts; non-zero exit on regression")
+    ap.add_argument("base", help="baseline artifact (e.g. committed "
+                                 "BENCH_paper.json)")
+    ap.add_argument("new", help="freshly generated artifact")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD_PCT,
+                    metavar="PCT",
+                    help="steady-state growth tolerated before failing "
+                         "(percent, default %(default)s)")
+    ap.add_argument("--min-ms", type=float, default=DEFAULT_MIN_MS,
+                    help="noise floor: the base steady state is clamped up "
+                         "to this before the threshold test (ms, default "
+                         "%(default)s)")
+    ap.add_argument("--fail-on-missing", action="store_true",
+                    help="also fail when a baseline scenario disappeared")
+    args = ap.parse_args(argv)
+
+    cmp = compare_artifacts(load_artifact(args.base), load_artifact(args.new),
+                            threshold_pct=args.threshold, min_ms=args.min_ms)
+    print(format_report(cmp))
+    if not cmp.ok:
+        return 1
+    if args.fail_on_missing and cmp.missing:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

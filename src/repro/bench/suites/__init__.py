@@ -1,0 +1,8 @@
+"""Scenario definitions, one module per paper figure/table plus the
+layers this repo added (gridding plans, the streaming engine, LM steps).
+Importing this package registers everything with
+``repro.bench.registry`` (which is why it is not named ``scenarios``:
+the subpackage attribute would shadow ``repro.bench.scenarios()``)."""
+
+from . import (fig4, fig5, fig6, fig89, gridding, lm, stream,  # noqa: F401
+               table1)

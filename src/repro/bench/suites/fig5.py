@@ -1,0 +1,78 @@
+"""Paper Fig. 5: transfer primitives — strong copy, weak copy,
+broadcast, reduce.
+
+Measured: wall time of the verb on this host at the scenario's device
+count.  Derived: modeled v5e times (host->HBM over PCIe for scatter;
+ICI ring for reduce) at 1/2/4/8 devices, showing the paper's effects:
+strong copy gets FASTER with more devices (parallel PCIe paths), reduce
+efficiency decays with P2P hops.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.runtime import HW
+from .. import models
+from ..registry import scenario
+
+PARAMS = {"tiny": dict(n=128, batch=4), "paper": dict(n=512, batch=8)}
+
+
+def _payload(ctx, seed=2):
+    p = PARAMS[ctx.size]
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((p["batch"], p["n"], p["n"]))
+         + 1j * rng.standard_normal((p["batch"], p["n"], p["n"])))
+    return p, x.astype(np.complex64)
+
+
+def _model_times(fn_bytes_to_s) -> dict:
+    return {f"model_t{G}_us": round(fn_bytes_to_s(G) * 1e6, 1)
+            for G in (1, 2, 4, 8)}
+
+
+@scenario("fig5", "strong_copy")
+def strong_copy(ctx):
+    """Fixed total payload scattered over the group (strong scaling)."""
+    _, x = _payload(ctx)
+    t = ctx.measure(lambda: ctx.comm.container(x).data)
+    extra = {"nbytes": x.nbytes, **_model_times(
+        lambda G: models.copy_time(x.nbytes / G, models.PCIE_BW))}
+    return {**t.as_dict(), "extra": extra}
+
+
+@scenario("fig5", "weak_copy")
+def weak_copy(ctx):
+    """Per-device-constant payload (weak scaling: one slab regardless)."""
+    p, x = _payload(ctx)
+    one = x[:1]
+    t = ctx.measure(lambda: ctx.comm.container(one).data)
+    extra = {"nbytes": one.nbytes, **_model_times(
+        lambda G: models.copy_time(x.nbytes / p["batch"], models.PCIE_BW))}
+    return {**t.as_dict(), "extra": extra}
+
+
+@scenario("fig5", "broadcast")
+def broadcast(ctx):
+    """CLONE one matrix to every device (host upload + ICI fan-out)."""
+    _, x = _payload(ctx)
+    one = x[0]
+    t = ctx.measure(lambda: ctx.comm.bcast(one).data)
+    extra = {"nbytes": one.nbytes, **_model_times(
+        lambda G: models.copy_time(one.nbytes, models.PCIE_BW)
+        + (G - 1) * one.nbytes / HW["ici_bw"])}
+    return {**t.as_dict(), "extra": extra}
+
+
+@scenario("fig5", "reduce")
+def reduce(ctx):
+    """Sum a segmented container to rank 0 (ring reduce + download)."""
+    _, x = _payload(ctx)
+    sm = ctx.comm.container(x)
+    one = x[0].nbytes
+    t = ctx.measure(lambda: ctx.comm.reduce(sm))
+    extra = {"nbytes": one, **_model_times(
+        lambda G: models.allreduce_time(one, G) / 2
+        + models.copy_time(one, models.PCIE_BW))}
+    return {**t.as_dict(), "extra": extra}

@@ -1,0 +1,91 @@
+"""Per-architecture LM step benchmarks (reduced configs, CPU): one
+train step and one decode step for every assigned arch.
+
+These are paper-size only and opt-in (``--only lm`` or ``--only all``):
+they compile a full transformer per architecture and are far heavier
+than the paper-figure scenarios the CI trajectory tracks.  The derived
+column carries the single-pod roofline bound from the dry-run artifacts
+when present.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from ..registry import scenario
+
+RESULTS = pathlib.Path(__file__).resolve().parents[4] / "results" / "dryrun"
+
+
+def _derived(arch: str, shape: str) -> str:
+    fn = RESULTS / f"{arch}__{shape}__pod16x16.json"
+    if not fn.exists():
+        return "dryrun=pending"
+    d = json.loads(fn.read_text())
+    if "skipped" in d:
+        return "skipped"
+    r = d["roofline"]
+    return (f"bound={r['dominant']};step_bound_ms="
+            f"{r['step_time_bound_s'] * 1e3:.1f}")
+
+
+def _steps(ctx, mode: str) -> dict:
+    # heavy imports stay inside the scenario: registering "lm" must not
+    # pull the model zoo into every bench child
+    import jax
+    import numpy as np
+
+    from ...configs import ARCH_IDS, get_smoke
+    from ...core import compat
+    from ...models import frontends, transformer
+    from ...train import make_train_state, make_train_step
+
+    per_arch, steady = {}, []
+    for arch in ARCH_IDS:
+        cfg = dataclasses.replace(get_smoke(arch), compute_dtype="float32")
+        mesh = compat.make_mesh((1,), ("data",))
+        state = make_train_state(cfg, jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+        enc = frontends.synthetic_frontend(cfg, 2)
+        if mode == "train":
+            step_fn, _ = make_train_step(cfg, mesh, remat=False, donate=False)
+            with mesh:
+                t = ctx.measure(jax.jit(step_fn), state, tok, tok, enc)
+            shape = "train_4k"
+        else:
+            params = state["params"]
+            cache = transformer.init_cache(cfg, 2, 64, cfg.cdtype)
+            _, cache, _ = transformer.apply(cfg, params, tok[:, :16], enc=enc,
+                                            mode="prefill", pos=0, cache=cache)
+
+            @jax.jit
+            def dec(p, c, t, pos):
+                lg, c2, _ = transformer.apply(cfg, p, t, mode="decode",
+                                              pos=pos, cache=c)
+                return lg, c2
+
+            t = ctx.measure(dec, params, cache, tok[:, :1], 16)
+            shape = "decode_32k"
+        per_arch[arch] = {"steady_ms": t.steady_ms,
+                          "compile_ms": t.compile_ms,
+                          "derived": _derived(arch, shape)}
+        steady.append(t.steady_ms)
+    return {"wall_ms": round(float(sum(steady)), 3),
+            "compile_ms": round(max(a["compile_ms"] for a in
+                                    per_arch.values()), 3),
+            "steady_ms": round(float(np.median(steady)), 3),
+            "extra": {"mode": mode, "per_arch": per_arch}}
+
+
+@scenario("lm", "train_step", sizes=("paper",), devices=(1,))
+def train_step(ctx):
+    """One train step per assigned architecture (median steady state)."""
+    return _steps(ctx, "train")
+
+
+@scenario("lm", "decode_step", sizes=("paper",), devices=(1,))
+def decode_step(ctx):
+    """One decode step per assigned architecture (median steady state)."""
+    return _steps(ctx, "decode")

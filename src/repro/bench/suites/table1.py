@@ -1,0 +1,120 @@
+"""Paper Table 1: operator breakdown of F, DF, DF^H, CG.
+
+Asserts the structural op counts of our implementation match the paper's
+table (FFT batches per operator) before timing anything — a scenario
+that drifts structurally must fail loudly, not get slowly slower — then
+times each operator plus the ``repro.lib.blas`` fused-epilogue rows the
+library port added (one pass over w vs the two-plan form).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...lib import blas as lblas
+from ...nlinv import phantom
+from ...nlinv.operators import make_ops, sobolev_weight, uaxpy, udot, uinit
+from ..registry import scenario
+
+PARAMS = {"tiny": dict(n=48, J=4), "paper": dict(n=128, J=8)}
+
+# paper Table 1 (ours: FFT batches per operator; DG/DGH include the coil
+# transform W; the all-reduce column is the distributed channel sum)
+EXPECTED = {
+    "F": dict(fft=2, channel_sum=0, allreduce=0),
+    "DF": dict(fft=3, channel_sum=0, allreduce=0),
+    "DFH": dict(fft=3, channel_sum=1, allreduce=1),
+    "CG": dict(scalar_products=2),
+}
+
+
+def _count_ffts(fn, *args):
+    def rec(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "fft":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    n += rec(v.jaxpr)
+                elif hasattr(v, "eqns"):
+                    n += rec(v)
+        return n
+    return rec(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _setup(ctx):
+    p = PARAMS[ctx.size]
+    d = phantom.make_dataset(n=p["n"], ncoils=p["J"], nspokes=11, frames=1)
+    ops = make_ops(d["masks"][0], d["fov"], sobolev_weight(d["grid"]))
+    u0 = uinit(d["ncoils"], d["grid"])
+    du = jax.tree.map(lambda x: x + 0.1, u0)
+    r = jnp.asarray(d["y"][0])
+    return d, ops, u0, du, r
+
+
+@scenario("table1", "F")
+def F(ctx):
+    """Forward model F (2 FFT batches), op counts asserted first."""
+    d, ops, u0, du, r = _setup(ctx)
+    assert _count_ffts(ops.G, u0) == EXPECTED["F"]["fft"]
+    assert _count_ffts(lambda a, b: ops.DG(a, b), u0, du) == \
+        EXPECTED["DF"]["fft"]
+    assert _count_ffts(lambda a, b: ops.DGH(a, b), u0, r) == \
+        EXPECTED["DFH"]["fft"]
+    t = ctx.measure(jax.jit(lambda u: ops.G(u)), u0)
+    return {**t.as_dict(), "extra": {"grid": d["grid"], "fft": 2,
+                                     "pointwise": 4}}
+
+
+@scenario("table1", "DF")
+def DF(ctx):
+    """Derivative DF (3 FFT batches, no channel sum)."""
+    d, ops, u0, du, _ = _setup(ctx)
+    t = ctx.measure(jax.jit(lambda u, v: ops.DG(u, v)), u0, du)
+    return {**t.as_dict(), "extra": {"grid": d["grid"], "fft": 3,
+                                     "pointwise": 5}}
+
+
+@scenario("table1", "DFH")
+def DFH(ctx):
+    """Adjoint DF^H (3 FFT batches + the distributed channel sum)."""
+    d, ops, u0, _, r = _setup(ctx)
+    t = ctx.measure(jax.jit(lambda u, v: ops.DGH(u, v)), u0, r)
+    return {**t.as_dict(), "extra": {"grid": d["grid"], "fft": 3,
+                                     "pointwise": 4, "channel_sum": 1,
+                                     "allreduce": 1}}
+
+
+@scenario("table1", "cg_iter")
+def cg_iter(ctx):
+    """One CG iteration: normal op + 2 scalar products + 3 axpys."""
+    d, ops, u0, du, _ = _setup(ctx)
+
+    def it(u, v):
+        Ap = ops.normal(u, v, 0.5)
+        a = jnp.real(udot(v, Ap))
+        return uaxpy(1.0 / (a + 1.0), Ap, v)
+
+    t = ctx.measure(jax.jit(it), u0, du)
+    return {**t.as_dict(), "extra": {"grid": d["grid"], "ab": 6,
+                                     "scalar_products": 2}}
+
+
+@scenario("table1", "axpy_norm2_fused")
+def axpy_norm2_fused(ctx):
+    """libblas fused epilogue (one pass over w) vs the two-plan form."""
+    p = PARAMS[ctx.size]
+    d = phantom.make_dataset(n=p["n"], ncoils=p["J"], nspokes=11, frames=1)
+    sx = ctx.comm.container(jnp.asarray(d["y"][0]))
+    sy = ctx.comm.container(jnp.asarray(d["y"][0]) * 0.5)
+    t = ctx.measure(lambda: lblas.axpy_norm2(-0.25, sx, sy)[1])
+    t_split = ctx.measure(lambda: lblas.norm2(lblas.axpy(-0.25, sx, sy)))
+    # the attributable plan-cache evidence is t.plan_cache (per-region
+    # deltas); the process-global plan_stats() would depend on whatever
+    # scenarios happened to run earlier in this child.
+    return {**t.as_dict(),
+            "extra": {"grid": d["grid"],
+                      "split_steady_ms": t_split.steady_ms}}

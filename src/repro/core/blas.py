@@ -14,6 +14,12 @@ import functools
 import warnings
 
 
+# warn exactly once per process per shim, whatever the warning filters
+# say — a hot loop through a shim must not spam (or pay for) a warning
+# per call.  tests clear this set to simulate a fresh process.
+_warned: set[str] = set()
+
+
 def _deprecated(name: str):
     def _target(*args, **kw):
         from ..lib import blas as lblas
@@ -21,9 +27,11 @@ def _deprecated(name: str):
 
     @functools.wraps(_target)
     def shim(*args, **kw):
-        warnings.warn(
-            f"repro.core.blas.{name} is deprecated; use "
-            f"repro.lib.blas.{name}", DeprecationWarning, stacklevel=2)
+        if name not in _warned:
+            _warned.add(name)
+            warnings.warn(
+                f"repro.core.blas.{name} is deprecated; use "
+                f"repro.lib.blas.{name}", DeprecationWarning, stacklevel=2)
         return _target(*args, **kw)
 
     shim.__name__ = name

@@ -17,12 +17,20 @@ import jax
 from .segmented import SegmentedArray
 
 
+# warn exactly once per process per shim, whatever the warning filters
+# say — a hot loop through a shim must not spam (or pay for) a warning
+# per call.  tests clear this set to simulate a fresh process.
+_warned: set[str] = set()
+
+
 def _deprecated(name: str, target):
     @functools.wraps(target)
     def shim(*args, **kw):
-        warnings.warn(
-            f"repro.core.fft.{name} is deprecated; use repro.lib.fft.{name}",
-            DeprecationWarning, stacklevel=2)
+        if name not in _warned:
+            _warned.add(name)
+            warnings.warn(
+                f"repro.core.fft.{name} is deprecated; use "
+                f"repro.lib.fft.{name}", DeprecationWarning, stacklevel=2)
         return target(*args, **kw)
     shim.__deprecated__ = f"repro.lib.fft.{name}"
     return shim

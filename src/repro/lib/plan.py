@@ -147,6 +147,20 @@ class PlanCache:
                 "builds": self.builds, "evictions": self.evictions,
                 "size": len(self._plans)}
 
+    def delta(self, since: dict) -> dict:
+        """Counter movement since a ``snapshot()`` — what one measured
+        region (a streamed frame, a benchmark's steady state) did to the
+        cache.  This is the harness-facing counter surface: the
+        streaming engine and ``repro.bench.harness.measure`` both report
+        it per region, so 'the steady state builds nothing' is a
+        checkable number (``builds == 0``) rather than a belief."""
+        now = self.snapshot()
+        d = {k: now[k] - since[k]
+             for k in ("hits", "misses", "builds", "evictions")}
+        total = d["hits"] + d["misses"]
+        d["hit_rate"] = round(d["hits"] / total, 4) if total else 0.0
+        return d
+
     def stats(self) -> dict:
         """Counters + derived hit rate, for report artifacts."""
         s = self.snapshot()

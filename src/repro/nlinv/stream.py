@@ -35,6 +35,24 @@ from .operators import sobolev_weight
 from .recon import Reconstructor, pad_channels
 
 
+def latency_stats(samples_ms) -> dict:
+    """Steady-state latency statistics over per-call wall-clock samples
+    (milliseconds).  Shared between the streaming LatencyReport and the
+    ``repro.bench`` timing harness so every latency number in the repo
+    is computed one way."""
+    arr = np.asarray(list(samples_ms), dtype=np.float64)
+    if arr.size == 0:
+        arr = np.zeros(1)
+    mean = float(arr.mean())
+    return {
+        "mean_ms": round(mean, 3),
+        "p50_ms": round(float(np.percentile(arr, 50)), 3),
+        "p95_ms": round(float(np.percentile(arr, 95)), 3),
+        "jitter_ms": round(float(arr.std()), 3),
+        "fps": round(1e3 / max(mean, 1e-9), 2),
+    }
+
+
 @dataclasses.dataclass
 class LatencyReport:
     """Per-frame wall-clock of one streaming run (milliseconds), plus
@@ -52,18 +70,13 @@ class LatencyReport:
     def summary(self) -> dict:
         """First frame pays compilation; steady-state stats exclude it."""
         steady = self.frame_ms[1:] if len(self.frame_ms) > 1 else self.frame_ms
-        arr = np.asarray(steady, dtype=np.float64)
         out = {
             "frames": len(self.frame_ms),
             "devices": self.devices,
             "grid": self.grid,
             "ncoils": self.ncoils,
             "first_frame_ms": round(self.frame_ms[0], 3),
-            "mean_ms": round(float(arr.mean()), 3),
-            "p50_ms": round(float(np.percentile(arr, 50)), 3),
-            "p95_ms": round(float(np.percentile(arr, 95)), 3),
-            "jitter_ms": round(float(arr.std()), 3),
-            "fps": round(1e3 / max(float(arr.mean()), 1e-9), 2),
+            **latency_stats(steady),
             "frame_ms": [round(t, 3) for t in self.frame_ms],
         }
         if self.frame_plan_builds:
@@ -140,10 +153,7 @@ class FrameStream:
 
         # report per-RUN counter deltas, not the process-global
         # cumulative stats — the artifact must describe this stream.
-        end = cache.snapshot()
-        run = {k: end[k] - run_start[k] for k in ("hits", "misses", "builds")}
-        total = run["hits"] + run["misses"]
-        run["hit_rate"] = round(run["hits"] / total, 4) if total else 0.0
+        run = cache.delta(run_start)
         report = LatencyReport(frame_ms, rec.comm.size, g, J,
                                frame_plan_builds=frame_builds,
                                plan_stats=run)

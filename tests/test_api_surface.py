@@ -167,3 +167,57 @@ def test_core_lib_shim_deprecation_table():
     for (mod, name), repl in EXPECTED_LIB_SHIMS.items():
         fn = getattr(getattr(core, mod), name)
         assert getattr(fn, "__deprecated__", None) == repl, (mod, name)
+
+
+# -- the repro.bench benchmark-subsystem surface (ISSUE 4) ------------------
+
+EXPECTED_BENCH_ALL = [
+    "artifact", "compare", "harness", "models", "registry",
+    "SCHEMA_VERSION", "ArtifactError", "load_artifact", "make_artifact",
+    "run_key", "validate_artifact", "write_artifact",
+    "Comparison", "compare_artifacts",
+    "BenchContext", "Timing", "measure",
+    "Scenario", "scenario", "scenarios",
+]
+
+# the harness/compare contracts scenario authors and CI scripts rely on
+EXPECTED_BENCH_SIGNATURES = {
+    "measure": ("fn", "args", "warmup", "iters", "cache", "kw"),
+    "compare_artifacts": ("base", "new", "threshold_pct", "min_ms"),
+    "make_artifact": ("runs", "sha", "host", "calibration_ms"),
+    "scenario": ("figure", "name", "sizes", "devices"),
+}
+
+# every artifact run row must keep exactly these required fields (the
+# compare tool and CI gate key off them)
+EXPECTED_ARTIFACT_REQUIRED = ["scenario", "figure", "devices", "size",
+                              "wall_ms", "compile_ms", "steady_ms"]
+
+
+def test_bench_all_snapshot():
+    import repro.bench as bench
+    assert list(bench.__all__) == EXPECTED_BENCH_ALL
+    for name in EXPECTED_BENCH_ALL:
+        assert hasattr(bench, name), f"__all__ names missing attr {name}"
+
+
+def test_bench_signatures():
+    import repro.bench as bench
+    for name, params in EXPECTED_BENCH_SIGNATURES.items():
+        got = _param_names(getattr(bench, name))
+        assert got == params, f"repro.bench.{name}: {got} != {params}"
+
+
+def test_bench_artifact_schema_fields():
+    from repro.bench.artifact import REQUIRED_FIELDS, SCHEMA_VERSION
+    assert SCHEMA_VERSION == 1
+    assert list(REQUIRED_FIELDS) == EXPECTED_ARTIFACT_REQUIRED
+
+
+def test_bench_timing_fields():
+    import dataclasses
+
+    from repro.bench import Timing
+    assert [f.name for f in dataclasses.fields(Timing)] == [
+        "wall_ms", "compile_ms", "steady_ms", "p50_ms", "p95_ms",
+        "jitter_ms", "iters", "warmup", "plan_cache"]

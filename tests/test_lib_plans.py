@@ -4,7 +4,8 @@
     cross-group isolation;
   * plan-cached fft/blas correctness vs the direct math, including the
     fused axpy+dot and dot+allreduce epilogues;
-  * the deprecated core.fft/core.blas shims warn and forward;
+  * the deprecated core.fft/core.blas shims warn (exactly once per
+    process) and forward;
   * the streaming engine's plan-cache report: frame 0 builds, steady
     state is all hits (4-device run lives in test_gridding.py).
 """
@@ -166,13 +167,23 @@ def test_blas_gemm_plans():
 def test_core_fft_blas_shims_warn_and_forward():
     from repro.core import blas as cblas
     from repro.core import fft as cfft
+    # simulate a fresh process: the shims guard their warning so it
+    # fires exactly once per process per function, independent of the
+    # ambient warning filters
+    cblas._warned.clear()
+    cfft._warned.clear()
     comm = Environment().subgroup(1)
     x, y = comm.container(_mk(10)), comm.container(_mk(11))
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         z = cblas.axpy(2.0, x, y)
+        cblas.axpy(2.0, x, y)
         k = cfft.fft2_batched(x, centered=True)
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+        cfft.fft2_batched(x, centered=True)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 2, [str(w.message) for w in deps]
+    assert {("axpy" in str(w.message), "fft2_batched" in str(w.message))
+            for w in deps} == {(True, False), (False, True)}
     np.testing.assert_allclose(np.asarray(z.data),
                                2.0 * np.asarray(x.data) + np.asarray(y.data),
                                atol=1e-5)
@@ -183,6 +194,30 @@ def test_core_fft_blas_shims_warn_and_forward():
         assert getattr(cblas, name).__deprecated__ == f"repro.lib.blas.{name}"
     for name in ("fft2", "fft2_batched"):
         assert getattr(cfft, name).__deprecated__ == f"repro.lib.fft.{name}"
+
+
+def test_core_fft_blas_shims_warn_once_per_process():
+    """The real per-process guarantee, in an actual fresh process: a hot
+    loop through a shim emits one DeprecationWarning total, even with
+    -W always-style filters."""
+    from helpers import run_with_devices
+    out = run_with_devices("""
+import warnings
+from repro.core import Environment
+from repro.core import blas as cblas, fft as cfft
+comm = Environment().subgroup(1)
+x = comm.container((np.random.randn(2, 8, 8)
+                    + 1j * np.random.randn(2, 8, 8)).astype(np.complex64))
+y = comm.container(np.asarray(x.data)[..., ::-1].copy())
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    for _ in range(5):
+        cblas.axpy(2.0, x, y)
+        cfft.fft2_batched(x)
+deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+check("one_warning_per_shim", len(deps) == 2)
+""", ndev=1)
+    assert "ok: one_warning_per_shim" in out
 
 
 # ---------------------------------------------------------------------------
