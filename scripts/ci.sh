@@ -9,10 +9,13 @@
 #                              #   devices (real multi-device mesh ambient;
 #                              #   subprocess-based tests manage their own
 #                              #   device counts either way)
-#   scripts/ci.sh bench        # tiny-CI benchmark sweep at 1 + 4 simulated
-#                              #   devices -> BENCH_paper.json, then
-#                              #   repro.bench.compare gates steady-state
-#                              #   regressions vs the committed baseline
+#   scripts/ci.sh bench        # tiny-CI benchmark sweep at 1 + 2 + 4
+#                              #   simulated devices -> BENCH_paper.json,
+#                              #   then repro.bench.compare gates
+#                              #   steady-state regressions vs the
+#                              #   committed baseline (and emits a
+#                              #   markdown table into the GitHub Actions
+#                              #   job summary when available)
 #   scripts/ci.sh full -k nlinv   # extra args are forwarded to pytest
 #   scripts/ci.sh -k nlinv        # (old form: tier defaults to all)
 set -euo pipefail
@@ -63,14 +66,14 @@ run_full() {
 }
 
 run_bench() {
-    echo "=== benchmark sweep (tiny-CI, 1 + 4 simulated devices) ==="
+    echo "=== benchmark sweep (tiny-CI, 1 + 2 + 4 simulated devices) ==="
     base=""
     if [ -f BENCH_paper.json ]; then
         base="$(mktemp)"
         trap 'rm -f "$base"' EXIT     # cleaned up even when the gate fails
         cp BENCH_paper.json "$base"
     fi
-    python -m repro.bench.run --size tiny --devices 1,4 --out BENCH_paper.json
+    python -m repro.bench.run --size tiny --devices 1,2,4 --out BENCH_paper.json
     if [ -n "$base" ]; then
         echo "=== regression gate vs committed baseline ==="
         # Threshold 75% + 1ms floor + calibration normalization + one
@@ -83,14 +86,24 @@ run_bench() {
         # strictness is a property of this CI tier, not of the tool.
         gate() {
             python -m repro.bench.compare "$base" BENCH_paper.json \
-                --threshold 75 --min-ms 1.0
+                --threshold 75 --min-ms 1.0 "$@"
+        }
+        # Per-scenario deltas land in the Actions job summary when
+        # GITHUB_STEP_SUMMARY is set — emitted exactly ONCE, from the
+        # final comparison (a failed first attempt must not leave a
+        # stale regression table above the one that decided the run).
+        summarize() {
+            if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+                gate --summary "$GITHUB_STEP_SUMMARY" >/dev/null || true
+            fi
         }
         if ! gate; then
             echo "=== gate failed; re-measuring once to rule out load ==="
-            python -m repro.bench.run --size tiny --devices 1,4 \
+            python -m repro.bench.run --size tiny --devices 1,2,4 \
                 --out BENCH_paper.json
             if ! gate; then
                 if [ "${BENCH_STRICT:-0}" = "1" ]; then
+                    summarize
                     echo "bench gate FAILED twice (BENCH_STRICT=1)" >&2
                     exit 1
                 fi
@@ -98,6 +111,7 @@ run_bench() {
                      "shared hosts (set BENCH_STRICT=1 to hard-fail)" >&2
             fi
         fi
+        summarize
         rm -f "$base"
     else
         echo "no committed BENCH_paper.json baseline; skipping compare"

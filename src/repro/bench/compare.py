@@ -1,7 +1,8 @@
 """Diff two benchmark artifacts and gate steady-state regressions.
 
   PYTHONPATH=src python -m repro.bench.compare BASE.json NEW.json \\
-      [--threshold 25] [--min-ms 0.01] [--fail-on-missing]
+      [--threshold 25] [--min-ms 0.01] [--fail-on-missing] \\
+      [--summary $GITHUB_STEP_SUMMARY]
 
 Exit status is non-zero iff a regression is found: a scenario present in
 both artifacts whose steady-state per-call cost grew by more than
@@ -113,6 +114,37 @@ def format_report(cmp: Comparison) -> str:
     return "\n".join(lines)
 
 
+def format_markdown(cmp: Comparison) -> str:
+    """GitHub-flavored markdown table of every per-scenario steady-state
+    delta — what ``--summary`` emits into the Actions job summary so the
+    trajectory is visible on every PR without downloading artifacts."""
+    lines = [
+        "### repro.bench steady-state vs baseline",
+        "",
+        f"threshold +{cmp.threshold_pct:g}% · noise floor "
+        f"{cmp.min_ms:g} ms · machine-speed scale {cmp.scale:g}x",
+        "",
+        "| scenario | base ms | new ms | ratio | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    rows = ([(e, "🔴 regression") for e in cmp.regressions] +
+            [(e, "🟢 improved") for e in cmp.improvements] +
+            [(e, "unchanged") for e in cmp.unchanged] +
+            [(e, "below floor") for e in cmp.below_floor])
+    for entry, status in sorted(rows, key=lambda r: r[0]["key"]):
+        ratio = entry["ratio"]
+        lines.append(
+            f"| `{entry['key']}` | {entry['base_ms']:g} | "
+            f"{entry['new_ms']:g} | "
+            f"{ratio if ratio is not None else '—'} | {status} |")
+    for key in cmp.new:
+        lines.append(f"| `{key}` | — | — | — | 🆕 new |")
+    for key in cmp.missing:
+        lines.append(f"| `{key}` | — | — | — | ⚠️ missing |")
+    lines.append("")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.bench.compare",
@@ -130,11 +162,22 @@ def main(argv=None) -> int:
                          "%(default)s)")
     ap.add_argument("--fail-on-missing", action="store_true",
                     help="also fail when a baseline scenario disappeared")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append a markdown table of per-scenario deltas "
+                         "to PATH (CI passes $GITHUB_STEP_SUMMARY); '-' "
+                         "prints it to stdout")
     args = ap.parse_args(argv)
 
     cmp = compare_artifacts(load_artifact(args.base), load_artifact(args.new),
                             threshold_pct=args.threshold, min_ms=args.min_ms)
     print(format_report(cmp))
+    if args.summary:
+        md = format_markdown(cmp)
+        if args.summary == "-":
+            print(md)
+        else:
+            with open(args.summary, "a") as f:
+                f.write(md + "\n")
     if not cmp.ok:
         return 1
     if args.fail_on_missing and cmp.missing:

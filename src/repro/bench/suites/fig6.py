@@ -50,6 +50,51 @@ def nlinv_frame(ctx):
     return {**t.as_dict(), "extra": extra}
 
 
+@scenario("fig6", "cg_fused")
+def cg_fused(ctx):
+    """A/B: fused CG hot path (default) vs the unfused escape hatch.
+
+    ``steady_ms`` is the fused frame (what the regression gate tracks);
+    ``extra`` carries the back-to-back unfused measurement and the
+    resulting same-machine speedup, which is the evidence the ISSUE-5
+    fusion/overlap work actually wins on this host.
+    """
+    p = PARAMS[ctx.size]
+    d = phantom.make_dataset(n=p["n"], ncoils=p["J"], nspokes=11, frames=1)
+    g = d["grid"]
+
+    def setup(fused):
+        rec = Reconstructor(ctx.comm, newton=p["newton"], cg_iters=p["cg"],
+                            channel_sum="crop", fused=fused)
+        y = rec.put_frame(pad_channels(np.asarray(d["y"][0]),
+                                       rec.comm.size))
+        mask = rec.put_const(np.asarray(d["masks"][0]))
+        fov = rec.put_const(np.asarray(d["fov"]))
+        w = rec.put_const(np.asarray(sobolev_weight(g)))
+        u0 = rec.init_carry(y.shape[0], g)
+        x_ref = jax.tree.map(lambda a: a + 0, u0)
+        return rec, (y, mask, fov, w, u0, x_ref)
+
+    rec_f, args_f = setup(True)
+    rec_u, args_u = setup(False)
+    # interleave the A/B rounds so slow machine episodes (shared-host
+    # neighbors, thermal) hit both arms instead of biasing whichever
+    # ran second; per arm the best (minimum) sample is kept.
+    t_f = ctx.measure(lambda: rec_f.fn(*args_f)[1])
+    t_u = ctx.measure(lambda: rec_u.fn(*args_u)[1])
+    t_f2 = ctx.measure(lambda: rec_f.fn(*args_f)[1])
+    t_u2 = ctx.measure(lambda: rec_u.fn(*args_u)[1])
+    fused_ms = min(t_f.steady_ms, t_f2.steady_ms)
+    unfused_ms = min(t_u.steady_ms, t_u2.steady_ms)
+    speedup = round(unfused_ms / max(fused_ms, 1e-9), 3)
+    extra = {"grid": g, "ncoils": d["ncoils"],
+             "unfused_steady_ms": unfused_ms,
+             "fused_speedup": speedup}
+    out = t_f.as_dict()
+    out["steady_ms"] = fused_ms
+    return {**out, "extra": extra}
+
+
 @scenario("fig6", "paper_claims", devices=(1,))
 def paper_claims(ctx):
     """Model-only validation of the paper's speedups + Fig. 7 energy."""

@@ -30,7 +30,6 @@ from .invoke import (invoke_kernel as _invoke_kernel,
                      make_spmd as _make_spmd)
 from .sync import fence, ordered
 from .sync import barrier as _barrier, barrier_fence as _barrier_fence
-from . import blas, fft
 
 
 def _deprecated(fn, name: str, replacement: str):
@@ -87,5 +86,4 @@ __all__ = [
     "invoke_kernel", "invoke_kernel_all", "make_spmd", "PassThrough",
     "dev_rank",
     "fence", "barrier", "barrier_fence", "ordered",
-    "blas", "fft",
 ]

@@ -323,19 +323,145 @@ def shift(x, offset: int = 1, *, wrap: bool = True, axis=None,
     return send_recv(x, ring_perm(nseg, offset, wrap), axis=axis)
 
 
-def ring_allreduce(x: jax.Array, axis, nseg: int, op: str = "sum") -> jax.Array:
+def ring_allreduce(x, axis, nseg: int, op: str = "sum", *,
+                   chunks: int = 1, compute: Callable | None = None):
     """All-reduce as ``nseg - 1`` ring ppermutes — the transfer schedule
     of the paper's ``kern_all_red_p2p_2d``, built on the p2p verb layer.
     Call inside a shard_map body.  Equivalent to the psum up to float
     summation order (ranks accumulate neighbours in ring order, so
-    replicas may differ in the last ulp)."""
+    replicas may differ in the last ulp).
+
+    ``x`` may be a pytree (every leaf rides the same ring schedule).
+    ``chunks > 1`` splits each leaf's leading dim into that many ring
+    payloads, so the schedule has independent in-flight transfers the
+    compiler can pipeline; the per-element accumulation order is
+    unchanged (bitwise identical to the unchunked ring).
+    ``compute`` is caller-supplied independent work (the 2017 follow-up's
+    communication/computation overlap): it is emitted after the FIRST
+    transfer round, so its ops have no data dependence on the remaining
+    rounds and the scheduler is free to run them while transfers are in
+    flight.  With ``compute`` the return value is ``(reduced, out)``.
+    """
     jop = _ELEMWISE[op]
     perm = ring_perm(nseg, 1, wrap=True)
-    acc = buf = x
-    for _ in range(nseg - 1):
-        buf = lax.ppermute(buf, axis, perm)
-        acc = jop(acc, buf)
-    return acc
+    leaves, treedef = jax.tree.flatten(x)
+
+    def _split(leaf):
+        leaf = jnp.asarray(leaf)
+        if chunks <= 1 or leaf.ndim == 0 or leaf.shape[0] < chunks:
+            return [leaf]
+        return jnp.array_split(leaf, chunks, axis=0)
+
+    pieces = [_split(leaf) for leaf in leaves]
+    flat = [p for ps in pieces for p in ps]
+    out = None
+    accs, bufs = list(flat), list(flat)
+    for step in range(nseg - 1):
+        bufs = [lax.ppermute(b, axis, perm) for b in bufs]
+        accs = [jop(a, b) for a, b in zip(accs, bufs)]
+        if step == 0 and compute is not None:
+            out = compute()
+    if compute is not None and out is None:     # nseg == 1 degenerate ring
+        out = compute()
+    merged, k = [], 0
+    for ps in pieces:
+        n = len(ps)
+        merged.append(accs[k] if n == 1
+                      else jnp.concatenate(accs[k:k + n], axis=0))
+        k += n
+    red = jax.tree.unflatten(treedef, merged)
+    return red if compute is None else (red, out)
+
+
+def all_reduce_overlap(x, window=None, *, op: str = "sum", axis=None,
+                       reduce_dim: int | None = None, window_axes=None,
+                       extras: tuple = (), compute: Callable | None = None,
+                       p2p: bool = False, chunks: int = 2,
+                       hierarchical: bool = False,
+                       group: DeviceGroup | None = None,
+                       mesh_axes: Sequence[str] | None = None):
+    """Windowed all-reduce fused with scalar piggybacks and overlapped
+    caller compute — the communication half of the fused NLINV hot path.
+
+    Generalizes ``all_reduce_window`` (in-shard_map / single-program
+    form) three ways, all motivated by the CG body of the 2017 follow-up:
+
+    * ``extras``: additional (typically scalar) partials reduced IN THE
+      SAME collective as the window — one variadic all-reduce instead of
+      one per quantity (the CG <p, Ap> scalar rides the Σ_g rho_g wire);
+    * ``compute``: independent work emitted between the local partials
+      and the collective's consumers, so the scheduler can overlap it
+      with the reduction (the ``dchat`` FFT branch of DG^H);
+    * ``p2p=True``: the reduction runs as the chunked
+      ``kern_all_red_p2p_2d`` ring schedule with ``compute`` interleaved
+      after the first transfer round (``chunks`` ring payloads).
+
+    Returns ``(reduced, extras_out, compute_out)``; ``compute_out`` is
+    ``None`` when no ``compute`` is given.  ``axis=None`` degenerates to
+    the local math (single-program form).
+    """
+    pcoll, jred = _REDUCERS[op]
+    if p2p and hierarchical:
+        raise ValueError("p2p and hierarchical are mutually exclusive "
+                         "reduction schedules")
+    if window is not None and op != "sum":
+        raise NotImplementedError(
+            f"windowed all-reduce supports op='sum' only, got {op!r}")
+    if reduce_dim is not None:
+        x = jred(x, axis=reduce_dim)
+    extras = tuple(jnp.asarray(e) for e in extras)
+    idx = None
+    xw = x
+    if window is not None:
+        idx = _window_index(x.ndim, window, window_axes)
+        xw = x[idx]
+
+    if axis is None:
+        red, ex = xw, extras
+        out = compute() if compute is not None else None
+    elif p2p:
+        if group is None or not mesh_axes:
+            raise ValueError("p2p=True needs group= and mesh_axes=")
+        if len(tuple(mesh_axes)) > 1:
+            raise ValueError("p2p ring reduction is single-axis")
+        ax = _axis_arg(tuple(mesh_axes))
+        nseg = group.axis_size(*mesh_axes)
+        payload = (xw, *extras)
+        if compute is None:
+            packed = ring_allreduce(payload, ax, nseg, op=op, chunks=chunks)
+            out = None
+        else:
+            packed, out = ring_allreduce(payload, ax, nseg, op=op,
+                                         chunks=chunks, compute=compute)
+        red, ex = packed[0], tuple(packed[1:])
+    else:
+        # emit the independent branch first: everything after has no
+        # dependence on it, so it can run while the reduction is on the
+        # wire (XLA's latency-hiding scheduler on TPU; harmless on CPU)
+        out = compute() if compute is not None else None
+        if hierarchical and op == "sum" and group is not None and mesh_axes:
+            red = hierarchical_psum(xw, group, mesh_axes)
+            ex = pcoll(extras, axis) if extras else ()
+        elif extras:
+            # pack the scalars INTO the window payload: one collective
+            # op, one rendezvous (a tuple psum lowers to one all-reduce
+            # per operand — as expensive as separate reductions)
+            dt = jnp.result_type(xw.dtype, *[e.dtype for e in extras])
+            packed = jnp.concatenate(
+                [jnp.ravel(xw).astype(dt)] +
+                [jnp.reshape(e, (1,)).astype(dt) for e in extras])
+            packed = pcoll(packed, axis)
+            n = xw.size
+            red = packed[:n].reshape(xw.shape).astype(xw.dtype)
+            ex = tuple(packed[n + i] if jnp.iscomplexobj(e)
+                       else jnp.real(packed[n + i]).astype(e.dtype)
+                       for i, e in enumerate(extras))
+        else:
+            red = pcoll(xw, axis)
+            ex = ()
+    if idx is not None:
+        red = jnp.zeros_like(x).at[idx].set(red)
+    return red, ex, out
 
 
 def all_gather(x, *, dim: int | None = None, axis=None, tiled: bool = True):

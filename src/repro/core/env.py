@@ -295,6 +295,47 @@ class Communicator:
                                        group=self.group,
                                        mesh_axes=self.mesh_axes)
 
+    def allreduce_overlap(self, x, window=None, *, op: str = "sum",
+                          axis=None, reduce_dim: int | None = None,
+                          window_axes=None, extras: tuple = (),
+                          compute=None, p2p: bool = False,
+                          chunks: int = 2, hierarchical: bool = False):
+        """Windowed all-reduce fused with piggybacked scalar reductions
+        and overlapped caller compute (the fused NLINV DG^H schedule);
+        see ``core.comm.all_reduce_overlap``.  In-shard_map /
+        single-program form only; returns
+        ``(reduced, extras_out, compute_out)``.
+
+        The window section is reduced and scattered back into zeros, the
+        extra scalar rides the same collective, and the independent
+        compute branch is free to overlap the transfer:
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import Environment
+        >>> comm = Environment().subgroup(1)
+        >>> red, ex, out = comm.allreduce_overlap(
+        ...     jnp.ones((4, 4)), ((1, 3), (1, 3)),
+        ...     extras=(jnp.float32(2.0),), compute=lambda: jnp.ones(2))
+        >>> (red[1].tolist(), float(ex[0]), out.tolist())
+        ([0.0, 1.0, 1.0, 0.0], 2.0, [1.0, 1.0])
+        """
+        if isinstance(x, SegmentedArray):
+            # no eager container form: the single-program branch would
+            # silently return the container unreduced
+            raise TypeError(
+                "allreduce_overlap takes a local shard (in-shard_map / "
+                "single-program form); for containers use "
+                "allreduce_window")
+        self._check_local_axis(axis, "allreduce_overlap")
+        return _comm.all_reduce_overlap(x, window, op=op, axis=axis,
+                                        reduce_dim=reduce_dim,
+                                        window_axes=window_axes,
+                                        extras=extras, compute=compute,
+                                        p2p=p2p, chunks=chunks,
+                                        hierarchical=hierarchical,
+                                        group=self.group,
+                                        mesh_axes=self.mesh_axes)
+
     def reduce_scatter(self, seg: SegmentedArray,
                        op: str = "sum") -> SegmentedArray:
         """MPI_Reduce_scatter: reduce segments, result left segmented.

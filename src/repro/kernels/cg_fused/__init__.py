@@ -1,0 +1,9 @@
+from .kernel import cg_update_pallas, xpby_dot_pallas
+from .ops import cg_update, xpby_dot
+from .ref import cg_update_ref, xpby_dot_ref
+
+__all__ = [
+    "cg_update", "xpby_dot",
+    "cg_update_pallas", "xpby_dot_pallas",
+    "cg_update_ref", "xpby_dot_ref",
+]

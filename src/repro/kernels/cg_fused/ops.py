@@ -1,0 +1,80 @@
+"""Complex-array wrappers with backend dispatch for the fused CG steps.
+
+On TPU the single-pass Pallas kernels run natively; elsewhere the ref
+path is used directly (it is the same single-expression fusion, which
+XLA compiles to one loop — interpret-mode Pallas would only slow the
+hot path down).  Shapes are arbitrary: leaves are flattened to (M, Y)
+row planes for the kernels and restored afterwards.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cg_update_pallas, xpby_dot_pallas, xpby_pallas
+from .ref import cg_update_ref, xpby_dot_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def _split(x):
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def _planes(x):
+    """Complex (..., Y) -> two (M, Y) f32 planes."""
+    y = x.shape[-1]
+    return [v.reshape(-1, y) for v in _split(x)]
+
+
+def _divisible(x, bm=32):
+    """Mirror of the kernels' row-block check (bm must match kernel.py's
+    default): flattened row count divisible by min(bm, rows)."""
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    return x.ndim >= 2 and m % min(bm, m) == 0
+
+
+def cg_update(alpha, p, ap, x, r, impl="auto"):
+    """Fused ``x' = x + alpha*p``, ``r' = r - alpha*Ap`` with the
+    ``rs = sum |r'|^2`` epilogue; one pass over the operands.
+    Returns ``(x', r', rs)``; ``rs`` is a real f32 scalar (a local
+    partial when the operands are shards)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp" or not _divisible(p):
+        return cg_update_ref(alpha, p, ap, x, r)
+    a = jnp.reshape(jnp.real(alpha).astype(jnp.float32), (1,))
+    planes = [*_planes(p), *_planes(ap), *_planes(x), *_planes(r)]
+    pr, pi, apr, api, xr, xi, rr, ri = planes
+    xr2, xi2, rr2, ri2, rs = cg_update_pallas(
+        a, pr, pi, apr, api, xr, xi, rr, ri, interpret=not _on_tpu())
+    x2 = (xr2 + 1j * xi2).reshape(x.shape).astype(x.dtype)
+    r2 = (rr2 + 1j * ri2).reshape(r.shape).astype(r.dtype)
+    return x2, r2, rs[0]
+
+
+def xpby_dot(x, y, beta, impl="auto", with_dot=True):
+    """Fused ``w = x + beta*y`` with the ``d = sum |w|^2`` epilogue (the
+    CG search-direction step).  Returns ``(w, d)``; ``with_dot=False``
+    skips the epilogue entirely (``d`` is None) — callers that discard
+    it must not pay for an un-DCE-able in-kernel reduction."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp" or not _divisible(x):
+        if not with_dot:
+            return x + beta * y, None
+        return xpby_dot_ref(x, y, beta)
+    b = jnp.reshape(jnp.real(beta).astype(jnp.float32), (1,))
+    xr, xi = _planes(x)
+    yr, yi = _planes(y)
+    if not with_dot:
+        wr, wi = xpby_pallas(b, xr, xi, yr, yi, interpret=not _on_tpu())
+        return (wr + 1j * wi).reshape(x.shape).astype(x.dtype), None
+    wr, wi, d = xpby_dot_pallas(b, xr, xi, yr, yi, interpret=not _on_tpu())
+    w = (wr + 1j * wi).reshape(x.shape).astype(x.dtype)
+    return w, d[0]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused CG vector updates.
+
+The unfused CG body makes three full passes over the iterate pytree
+(``x += a*p``, ``r -= a*Ap``, ``rs = <r, r>``) plus a fourth for
+``p = r + b*p``.  The fused forms below are the single-pass semantics the
+Pallas kernels implement; on non-TPU backends they ARE the hot path
+(XLA fuses the expression into one loop over the operands)."""
+
+import jax.numpy as jnp
+
+
+def cg_update_ref(alpha, p, ap, x, r):
+    """Single-pass CG update: ``x' = x + alpha*p``, ``r' = r - alpha*Ap``
+    and the residual dot-product epilogue ``rs = sum |r'|^2`` (real f32),
+    over ONE array (callers map it over the iterate pytree).  ``rs`` is a
+    local partial on segmented operands — the caller reduces it."""
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    return x2, r2, jnp.real(jnp.vdot(r2, r2)).astype(jnp.float32)
+
+
+def xpby_dot_ref(x, y, beta):
+    """Fused ``w = x + beta*y`` with the ``sum |w|^2`` dot epilogue (the
+    CG search-direction step ``p = r + beta*p``)."""
+    w = x + beta * y
+    return w, jnp.real(jnp.vdot(w, w)).astype(jnp.float32)

@@ -1,6 +1,11 @@
-from .ops import coil_forward, coil_adjoint
-from .kernel import coil_forward_pallas, coil_adjoint_pallas
-from .ref import coil_forward_ref, coil_adjoint_ref
+from .ops import coil_forward, coil_adjoint, coil_lincomb, plane_mult
+from .kernel import (coil_forward_pallas, coil_adjoint_pallas,
+                     coil_lincomb_pallas, plane_mult_pallas)
+from .ref import (coil_forward_ref, coil_adjoint_ref, coil_lincomb_ref,
+                  plane_mult_ref)
 
-__all__ = ["coil_forward", "coil_adjoint", "coil_forward_pallas",
-           "coil_adjoint_pallas", "coil_forward_ref", "coil_adjoint_ref"]
+__all__ = ["coil_forward", "coil_adjoint", "coil_lincomb", "plane_mult",
+           "coil_forward_pallas", "coil_adjoint_pallas",
+           "coil_lincomb_pallas", "plane_mult_pallas",
+           "coil_forward_ref", "coil_adjoint_ref", "coil_lincomb_ref",
+           "plane_mult_ref"]

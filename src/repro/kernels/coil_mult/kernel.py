@@ -59,6 +59,97 @@ def coil_forward_pallas(cr, ci, xr, xi, *, bx=32, interpret=True):
     )(cr, ci, xr, xi)
 
 
+def _lincomb_kernel(ar, ai, xr, xi, br, bi, yr, yi, s, zr, zi):
+    # out_j = s * (a*x_j + b*y_j): one VMEM pass over both coil stacks
+    a, b = ar[...], ai[...]
+    c, d = xr[0], xi[0]
+    e, f = br[...], bi[...]
+    g, h = yr[0], yi[0]
+    re = a * c - b * d + e * g - f * h
+    im = a * d + b * c + e * h + f * g
+    zr[0] = s[...] * re
+    zi[0] = s[...] * im
+
+
+@functools.partial(jax.jit, static_argnames=("bx", "interpret"))
+def coil_lincomb_pallas(ar, ai, xr, xi, br, bi, yr, yi, s, *,
+                        bx=32, interpret=True):
+    """out_j = s * (a*x_j + b*y_j); planes (X, Y), stacks (J, X, Y)."""
+    J, X, Y = xr.shape
+    bx = min(bx, X)
+    assert X % bx == 0
+    grid = (J, X // bx)
+    plane = pl.BlockSpec((bx, Y), lambda j, i: (i, 0))
+    stack = pl.BlockSpec((1, bx, Y), lambda j, i: (j, i, 0))
+    return pl.pallas_call(
+        _lincomb_kernel,
+        grid=grid,
+        in_specs=[plane, plane, stack, stack,
+                  plane, plane, stack, stack, plane],
+        out_specs=[stack, stack],
+        out_shape=[jax.ShapeDtypeStruct((J, X, Y), xr.dtype)] * 2,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(ar, ai, xr, xi, br, bi, yr, yi, s)
+
+
+def _scale_mult_kernel(ar, ai, xr, xi, s, zr, zi):
+    # out_j = s * (a * x_j): the one-term lincomb (G's fov*(rho*c))
+    a, b = ar[...], ai[...]
+    c, d = xr[0], xi[0]
+    zr[0] = s[...] * (a * c - b * d)
+    zi[0] = s[...] * (a * d + b * c)
+
+
+@functools.partial(jax.jit, static_argnames=("bx", "interpret"))
+def coil_scale_mult_pallas(ar, ai, xr, xi, s, *, bx=32, interpret=True):
+    """out_j = s * (a * x_j) — coil_lincomb's one-term form, its own
+    kernel so the b=None case pays no zero-operand traffic."""
+    J, X, Y = xr.shape
+    bx = min(bx, X)
+    assert X % bx == 0
+    grid = (J, X // bx)
+    plane = pl.BlockSpec((bx, Y), lambda j, i: (i, 0))
+    stack = pl.BlockSpec((1, bx, Y), lambda j, i: (j, i, 0))
+    return pl.pallas_call(
+        _scale_mult_kernel,
+        grid=grid,
+        in_specs=[plane, plane, stack, stack, plane],
+        out_specs=[stack, stack],
+        out_shape=[jax.ShapeDtypeStruct((J, X, Y), xr.dtype)] * 2,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(ar, ai, xr, xi, s)
+
+
+def _plane_mult_kernel(zr, zi, m, outr, outi):
+    outr[0] = zr[0] * m[...]
+    outi[0] = zi[0] * m[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bx", "interpret"))
+def plane_mult_pallas(zr, zi, m, *, bx=32, interpret=True):
+    """out_j = z_j * m (real plane broadcast over the coil dim)."""
+    J, X, Y = zr.shape
+    bx = min(bx, X)
+    assert X % bx == 0
+    grid = (J, X // bx)
+    plane = pl.BlockSpec((bx, Y), lambda j, i: (i, 0))
+    stack = pl.BlockSpec((1, bx, Y), lambda j, i: (j, i, 0))
+    return pl.pallas_call(
+        _plane_mult_kernel,
+        grid=grid,
+        in_specs=[stack, stack, plane],
+        out_specs=[stack, stack],
+        out_shape=[jax.ShapeDtypeStruct((J, X, Y), zr.dtype)] * 2,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(zr, zi, m)
+
+
 def _adj_kernel(cr, ci, zr, zi, m, outr, outi, accr, acci, *, nj):
     j = pl.program_id(1)
 

@@ -5,8 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import coil_adjoint_pallas, coil_forward_pallas
-from .ref import coil_adjoint_ref, coil_forward_ref
+from .kernel import (coil_adjoint_pallas, coil_forward_pallas,
+                     coil_lincomb_pallas, coil_scale_mult_pallas,
+                     plane_mult_pallas)
+from .ref import (coil_adjoint_ref, coil_forward_ref, coil_lincomb_ref,
+                  plane_mult_ref)
 
 
 def _on_tpu():
@@ -26,6 +29,46 @@ def coil_forward(coils, x, impl="auto"):
     xr, xi = _split(x)
     zr, zi = coil_forward_pallas(cr, ci, xr, xi, interpret=not _on_tpu())
     return (zr + 1j * zi).astype(coils.dtype)
+
+
+def coil_lincomb(a, x, b=None, y=None, scale=None, impl="auto"):
+    """out_j = scale * (a * x_j + b * y_j) in one fused pass — the
+    generalized coil pointwise chain of NLINV's G/DG (``fov*(rho*c)``,
+    ``fov*(drho*c0 + rho0*dc)``) without materialized intermediates."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return coil_lincomb_ref(a, x, b, y, scale)
+    J, X, Y = x.shape
+    ar, ai = _split(jnp.broadcast_to(a, (X, Y)))
+    xr, xi = _split(x)
+    # scale=None streams a ones plane through the kernel; acceptable
+    # because every hot-path caller (G/DG) passes the FOV scale — only
+    # b=None is frequent enough to warrant its own kernel variant.
+    s = jnp.ones((X, Y), jnp.float32) if scale is None \
+        else jnp.asarray(scale, jnp.float32)
+    if b is None:
+        zr, zi = coil_scale_mult_pallas(ar, ai, xr, xi, s,
+                                        interpret=not _on_tpu())
+        return (zr + 1j * zi).astype(x.dtype)
+    br, bi = _split(jnp.broadcast_to(b, (X, Y)))
+    yr, yi = _split(y)
+    zr, zi = coil_lincomb_pallas(ar, ai, xr, xi, br, bi, yr, yi, s,
+                                 interpret=not _on_tpu())
+    return (zr + 1j * zi).astype(x.dtype)
+
+
+def plane_mult(z, m, impl="auto"):
+    """z_j * m: the mask / FOV / Sobolev-weight broadcast multiply as one
+    fused pointwise pass over the coil stack."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp" or z.ndim != m.ndim + 1:
+        return plane_mult_ref(z, jnp.asarray(m, jnp.float32))
+    zr, zi = _split(z)
+    outr, outi = plane_mult_pallas(zr, zi, jnp.asarray(m, jnp.float32),
+                                   interpret=not _on_tpu())
+    return (outr + 1j * outi).astype(z.dtype)
 
 
 def coil_adjoint(coils, z, mask=None, impl="auto"):

@@ -15,3 +15,26 @@ def coil_adjoint_ref(coils, z, mask=None):
     if mask is not None:
         out = out * mask
     return out
+
+
+def coil_lincomb_ref(a, x, b=None, y=None, scale=None):
+    """Generalized coil linear combination in one pass:
+
+        out_j = scale * (a * x_j + b * y_j)
+
+    ``a``/``b``: (X, Y) complex planes, ``x``/``y``: (J, X, Y) coil
+    stacks, ``scale``: (X, Y) real plane (or None).  ``b=None`` drops the
+    second term.  Covers the NLINV pointwise chains ``fov*(rho*c)`` (G)
+    and ``fov*(drho*c0 + rho0*dc)`` (DG) without intermediates."""
+    out = a[None] * x
+    if b is not None:
+        out = out + b[None] * y
+    if scale is not None:
+        out = scale[None] * out
+    return out
+
+
+def plane_mult_ref(z, m):
+    """Broadcast real-plane multiply ``z_j * m`` (the mask / FOV / Sobolev
+    weight application fused as one pointwise pass)."""
+    return z * m[None] if z.ndim == m.ndim + 1 else z * m

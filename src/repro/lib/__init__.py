@@ -11,7 +11,8 @@ device group, built once and cached (LRU, hit/miss counters):
 ``repro.lib.plan`` holds the shared ``Plan``/``PlanCache`` machinery;
 ``plan_stats()`` reports the default cache (the streaming engine
 surfaces it per frame).  The old ``repro.core.fft``/``repro.core.blas``
-free functions are deprecated shims over these ports.
+shims over these ports were removed on schedule (README PR 4); these
+modules are the only segmented FFT/BLAS surface.
 """
 
 from . import blas, fft, gridding, plan

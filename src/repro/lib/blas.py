@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from ..core import compat
 from ..core.comm import _axis_arg
 from ..core.segmented import Policy, SegmentedArray
+from ..kernels.cg_fused import ops as _cg_ops
 from .plan import Plan, PlanCache, default_cache, seg_token
 
 
@@ -47,6 +48,30 @@ def _binary_plan(op: str, x: SegmentedArray, y: SegmentedArray,
 
 
 # ---------------------------------------------------------------------------
+# tree-level math (plain arrays / tracers) — the ONE implementation the
+# segmented plans below and nlinv's pytree algebra (operators.uaxpy/udot)
+# both route through, so single-device and distributed paths share it.
+# ---------------------------------------------------------------------------
+
+def tree_axpy(a, x, y):
+    """``a*x + y`` over matching pytrees of plain arrays (jit/shard_map
+    safe — the in-program form of :func:`axpy`)."""
+    return jax.tree.map(lambda u, v: a * u + v, x, y)
+
+
+def tree_vdot(x, y):
+    """Conjugating inner product summed over all leaves of matching
+    pytrees (the in-program form of :func:`dot`; callers inject the
+    cross-segment reduction, e.g. ``Communicator.vdot``)."""
+    xl, xdef = jax.tree.flatten(x)
+    yl, ydef = jax.tree.flatten(y)
+    if xdef != ydef:
+        raise ValueError(f"tree_vdot operands differ in structure: "
+                         f"{xdef} vs {ydef}")
+    return sum(jnp.vdot(a, b) for a, b in zip(xl, yl))
+
+
+# ---------------------------------------------------------------------------
 # level-1: axpy / dot / norm2 (+ fused epilogues)
 # ---------------------------------------------------------------------------
 
@@ -55,7 +80,7 @@ def axpy(a, x: SegmentedArray, y: SegmentedArray,
     """a*X + Y, segment-local (the strong-scaling op of paper Fig. 4).
     ``a`` is a runtime scalar — it does not key the plan."""
     plan = _binary_plan("axpy", x, y,
-                        lambda: jax.jit(lambda a_, xd, yd: a_ * xd + yd),
+                        lambda: jax.jit(tree_axpy),
                         cache)
     return y.with_data(plan(jnp.asarray(a), x.data, y.data))
 
@@ -64,7 +89,7 @@ def dot(x: SegmentedArray, y: SegmentedArray,
         cache: PlanCache | None = None) -> jax.Array:
     """<x, y> (conjugating) with one reduction across segments."""
     plan = _binary_plan("dot", x, y,
-                        lambda: jax.jit(lambda xd, yd: jnp.vdot(xd, yd)),
+                        lambda: jax.jit(tree_vdot),
                         cache)
     return plan(x.data, y.data)
 
@@ -111,6 +136,88 @@ def axpy_norm2(a, x: SegmentedArray, y: SegmentedArray,
     plan = _binary_plan("axpy_norm2", x, y, build, cache)
     w, n = plan(jnp.asarray(a), x.data, y.data)
     return y.with_data(w), n
+
+
+def _is_seg(leaf):
+    return isinstance(leaf, SegmentedArray)
+
+
+def _seg_leaves(tree, name):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_seg)
+    if not leaves or not all(_is_seg(l) for l in leaves):
+        raise ValueError(f"{name} operands must be (pytrees of) "
+                         f"SegmentedArrays")
+    return leaves, treedef
+
+
+def cg_update(alpha, p, ap, x, r, cache: PlanCache | None = None):
+    """Fused single-pass CG update over (pytrees of) containers:
+    ``x' = x + alpha*p``, ``r' = r - alpha*Ap`` and the residual
+    dot-product epilogue ``rs = sum |r'|^2`` — the three-pass unfused
+    body collapsed into one program (``kernels.cg_fused``; the Pallas
+    kernels on TPU, the same single-expression fusion via XLA
+    elsewhere).  Returns ``(x', r', rs)``.
+
+    The epilogue follows the same reduction contract as
+    ``Communicator.vdot``: on the logical container data the global
+    contraction already spans all shards, so no explicit collective is
+    added and CLONE leaves count once.
+    """
+    cache = _cache(cache)
+    pl_, pdef = _seg_leaves(p, "cg_update")
+    apl, _ = _seg_leaves(ap, "cg_update")
+    xl, _ = _seg_leaves(x, "cg_update")
+    rl, rdef = _seg_leaves(r, "cg_update")
+    n = len(xl)
+    key = ("blas", "cg_update", tuple(seg_token(l) for l in xl),
+           tuple(seg_token(l) for l in pl_))
+
+    def build():
+        def fused(a_, *flat):
+            ps, aps = flat[:n], flat[n:2 * n]
+            xs, rs = flat[2 * n:3 * n], flat[3 * n:]
+            outs = [_cg_ops.cg_update(a_, p_, ap_, x_, r_)
+                    for p_, ap_, x_, r_ in zip(ps, aps, xs, rs)]
+            return ([o[0] for o in outs], [o[1] for o in outs],
+                    sum(o[2] for o in outs))
+        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="cg_update")
+
+    plan = cache.get_or_build(key, build)
+    x2, r2, rs = plan(jnp.asarray(alpha),
+                      *[l.data for l in pl_], *[l.data for l in apl],
+                      *[l.data for l in xl], *[l.data for l in rl])
+    x_out = jax.tree.unflatten(pdef, [s.with_data(d)
+                                      for s, d in zip(xl, x2)])
+    r_out = jax.tree.unflatten(rdef, [s.with_data(d)
+                                      for s, d in zip(rl, r2)])
+    return x_out, r_out, rs
+
+
+def xpby_dot(x, y, beta, cache: PlanCache | None = None):
+    """Fused ``w = x + beta*y`` with the ``sum |w|^2`` epilogue over
+    (pytrees of) containers — the CG search-direction step
+    ``p = r + beta*p`` in one pass.  Returns ``(w, d)``."""
+    cache = _cache(cache)
+    xl, xdef = _seg_leaves(x, "xpby_dot")
+    yl, _ = _seg_leaves(y, "xpby_dot")
+    n = len(xl)
+    key = ("blas", "xpby_dot", tuple(seg_token(l) for l in xl),
+           tuple(seg_token(l) for l in yl))
+
+    def build():
+        def fused(b_, *flat):
+            xs, ys = flat[:n], flat[n:]
+            outs = [_cg_ops.xpby_dot(x_, y_, b_)
+                    for x_, y_ in zip(xs, ys)]
+            return [o[0] for o in outs], sum(o[1] for o in outs)
+        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="xpby_dot")
+
+    plan = cache.get_or_build(key, build)
+    w, d = plan(jnp.asarray(beta),
+                *[l.data for l in xl], *[l.data for l in yl])
+    w_out = jax.tree.unflatten(xdef, [s.with_data(v)
+                                      for s, v in zip(xl, w)])
+    return w_out, d
 
 
 def dot_allreduce(x: SegmentedArray, y: SegmentedArray,

@@ -32,7 +32,7 @@ from ..core.env import Communicator, Environment
 from ..core.runtime import DeviceGroup
 from ..core.segmented import Policy
 from ..lib.plan import Plan, default_cache, group_token
-from .irgnm import irgnm
+from .irgnm import irgnm, irgnm_fused
 from .operators import make_ops, sobolev_weight, uinit
 
 # Segmentation of the unknown pytree u = {rho, chat} (paper §3.2).
@@ -63,17 +63,30 @@ class Reconstructor:
     forwards to it.  ``.fn_donate_carry`` is the same program with the
     Newton carry ``(x0, x_ref)`` buffers donated — the streaming engine's
     steady-state path.
+
+    ``fused=True`` (default) runs the fused hot path (``irgnm_fused``:
+    hoisted Newton-point constants, single-pass CG update kernels, the
+    ``<p, Ap>`` scalar piggybacked on the channel-sum collective and the
+    dchat FFT branch overlapped with it); ``fused=False`` is the unfused
+    escape hatch with the original verb-per-op body.  ``overlap`` picks
+    the fused reduction schedule: ``"psum"`` (one variadic all-reduce)
+    or ``"p2p"`` (the chunked ``kern_all_red_p2p_2d`` ppermute ring with
+    compute interleaved between transfer rounds).
     """
 
     def __init__(self, comm: Communicator | DeviceGroup | None = None,
                  axis: str = "data", *, newton: int = 7, cg_iters: int = 30,
-                 channel_sum: str = "crop", hierarchical: bool = False):
+                 channel_sum: str = "crop", hierarchical: bool = False,
+                 fused: bool = True, overlap: str = "psum"):
         if channel_sum not in ("full", "crop"):
             raise ValueError(f"channel_sum must be full|crop: {channel_sum}")
+        if overlap not in ("psum", "p2p"):
+            raise ValueError(f"overlap must be psum|p2p: {overlap}")
         self.comm = _as_communicator(comm, axis)
         self.axis = self.comm.axis
         self.newton, self.cg_iters = newton, cg_iters
         self.channel_sum, self.hierarchical = channel_sum, hierarchical
+        self.fused, self.overlap = fused, overlap
         self.plan_cache = default_cache()
 
     @property
@@ -84,20 +97,42 @@ class Reconstructor:
     def _frame(self, y, mask, fov, weight, x0, x_ref):
         crop = self.channel_sum == "crop"
 
-        def csum(prod):
-            g = prod.shape[-1]
-            q = g // 4
-            win = ((q, 3 * q), (q, 3 * q)) if crop else None
-            return self.comm.allreduce_window(
-                prod, win, axis=self.axis, reduce_dim=0,
-                hierarchical=self.hierarchical)
-
-        def dot(a, b):
-            return self.comm.vdot(a, b, axis=self.axis, policies=U_POLICIES)
-
         ops = make_ops(mask, fov, weight)
-        u = irgnm(ops, y, x0, x_ref, newton=self.newton,
-                  cg_iters=self.cg_iters, channel_sum=csum, dot=dot)
+        if self.fused:
+            # Fused hot path: windowed channel sum + <p, Ap> piggyback +
+            # overlapped dchat branch as ONE reducer hook, and the
+            # residual-norm partials merged with the vdot policy rules
+            # (rho CLONE counted once, chat NATURAL psum'd).
+            def reducer(prod, extras, compute):
+                g = prod.shape[-1]
+                q = g // 4
+                win = ((q, 3 * q), (q, 3 * q)) if crop else None
+                return self.comm.allreduce_overlap(
+                    prod, win, axis=self.axis, extras=extras,
+                    compute=compute, p2p=self.overlap == "p2p",
+                    hierarchical=self.hierarchical)
+
+            def rs_sum(parts):
+                nat = self.comm.allreduce(parts["chat"], axis=self.axis)
+                return parts["rho"] + nat
+            u = irgnm_fused(ops, y, x0, x_ref, newton=self.newton,
+                            cg_iters=self.cg_iters, reducer=reducer,
+                            rs_sum=rs_sum)
+        else:
+            def csum(prod):
+                g = prod.shape[-1]
+                q = g // 4
+                win = ((q, 3 * q), (q, 3 * q)) if crop else None
+                return self.comm.allreduce_window(
+                    prod, win, axis=self.axis, reduce_dim=0,
+                    hierarchical=self.hierarchical)
+
+            def dot(a, b):
+                return self.comm.vdot(a, b, axis=self.axis,
+                                      policies=U_POLICIES)
+
+            u = irgnm(ops, y, x0, x_ref, newton=self.newton,
+                      cg_iters=self.cg_iters, channel_sum=csum, dot=dot)
         c = ops.coils(u["chat"])
         rss = self.comm.allreduce_window(jnp.abs(c) ** 2, None,
                                          axis=self.axis, reduce_dim=0)
@@ -119,7 +154,7 @@ class Reconstructor:
         pure cache hits (and the hit/miss counters prove it)."""
         key = ("nlinv", "frame", group_token(self.comm), self.newton,
                self.cg_iters, self.channel_sum, self.hierarchical,
-               bool(donate))
+               self.fused, self.overlap, bool(donate))
         return self.plan_cache.get_or_build(
             key, lambda: Plan(key=key, fn=self._build(donate),
                               lib="nlinv", op="frame"))
@@ -167,13 +202,14 @@ def reconstruct_frame(y, mask, fov, weight, x0, x_ref, *,
 
 
 def make_dist_reconstruct(comm, axis: str = "data", *,
-                          newton=7, cg_iters=30, channel_sum="crop"):
+                          newton=7, cg_iters=30, channel_sum="crop",
+                          fused=True):
     """Compiled distributed NLINV: coils split over ``axis`` (paper §3.2).
     ``comm`` may be a Communicator or a DeviceGroup.  Returns the jitted
     frame function (kept for callers that want the bare callable; new
     code should hold the ``Reconstructor``)."""
     return Reconstructor(comm, axis, newton=newton, cg_iters=cg_iters,
-                         channel_sum=channel_sum).fn
+                         channel_sum=channel_sum, fused=fused).fn
 
 
 def pad_channels(y, nseg, axis: int = 0):

@@ -163,11 +163,12 @@ class FrameStream:
 
 
 def stream_movie(data, *, comm=None, newton=7, cg_iters=30, damping=0.9,
-                 channel_sum="crop", report_path=None):
+                 channel_sum="crop", fused=True, report_path=None):
     """Convenience wrapper: dataset dict -> (images, LatencyReport).
-    ``comm`` is a Communicator (or DeviceGroup; None = 1 device)."""
+    ``comm`` is a Communicator (or DeviceGroup; None = 1 device);
+    ``fused=False`` is the unfused escape hatch."""
     rec = Reconstructor(comm, newton=newton, cg_iters=cg_iters,
-                        channel_sum=channel_sum)
+                        channel_sum=channel_sum, fused=fused)
     eng = FrameStream(rec, damping=damping)
     return eng.run(data["y"], data["masks"], data["fov"],
                    report_path=report_path)

@@ -23,7 +23,6 @@ EXPECTED_ALL = [
     "invoke_kernel", "invoke_kernel_all", "make_spmd", "PassThrough",
     "dev_rank",
     "fence", "barrier", "barrier_fence", "ordered",
-    "blas", "fft",
 ]
 
 # Every public Communicator method and its exact parameter list (the
@@ -38,6 +37,9 @@ EXPECTED_COMMUNICATOR = {
     "allreduce": ("self", "x", "op", "hierarchical", "p2p", "axis"),
     "allreduce_window": ("self", "x", "window", "op", "axis", "reduce_dim",
                          "hierarchical", "window_axes", "p2p"),
+    "allreduce_overlap": ("self", "x", "window", "op", "axis", "reduce_dim",
+                          "window_axes", "extras", "compute", "p2p",
+                          "chunks", "hierarchical"),
     "reduce_scatter": ("self", "seg", "op"),
     "alltoall": ("self", "seg", "new_dim"),
     "vdot": ("self", "x", "y", "axis", "policies"),
@@ -131,18 +133,6 @@ def test_segmented_array_fluent_surface():
 EXPECTED_LIB_ALL = ["blas", "fft", "gridding", "plan",
                     "Plan", "PlanCache", "default_cache", "plan_stats"]
 
-# deprecated core module-level free function -> its repro.lib replacement
-EXPECTED_LIB_SHIMS = {
-    ("fft", "fft2"): "repro.lib.fft.fft2",
-    ("fft", "fft2_batched"): "repro.lib.fft.fft2_batched",
-    ("blas", "axpy"): "repro.lib.blas.axpy",
-    ("blas", "dot"): "repro.lib.blas.dot",
-    ("blas", "norm2"): "repro.lib.blas.norm2",
-    ("blas", "gemm_batched"): "repro.lib.blas.gemm_batched",
-    ("blas", "gemm_ksplit"): "repro.lib.blas.gemm_ksplit",
-}
-
-
 def test_lib_all_snapshot():
     import repro.lib as lib
     assert list(lib.__all__) == EXPECTED_LIB_ALL
@@ -157,16 +147,24 @@ def test_lib_ports_expose_plan_builders():
     for name in ("plan_fft2", "plan_fft2_batched", "fft2", "fft2_batched"):
         assert callable(getattr(fft, name)), name
     for name in ("axpy", "dot", "norm2", "gemm_batched", "gemm_ksplit",
-                 "axpy_dot", "axpy_norm2", "dot_allreduce"):
+                 "axpy_dot", "axpy_norm2", "dot_allreduce",
+                 "cg_update", "xpby_dot", "tree_axpy", "tree_vdot"):
         assert callable(getattr(blas, name)), name
     for name in ("plan_gridding", "radial_trajectory", "ramlak_dcf_radial"):
         assert callable(getattr(gridding, name)), name
 
 
-def test_core_lib_shim_deprecation_table():
-    for (mod, name), repl in EXPECTED_LIB_SHIMS.items():
-        fn = getattr(getattr(core, mod), name)
-        assert getattr(fn, "__deprecated__", None) == repl, (mod, name)
+def test_core_fft_blas_shims_removed():
+    """The repro.core.fft / repro.core.blas DeprecationWarning shims were
+    removed on schedule (README PR 4); repro.lib is the only surface."""
+    import importlib
+    for mod in ("repro.core.fft", "repro.core.blas"):
+        try:
+            importlib.import_module(mod)
+        except ModuleNotFoundError:
+            continue
+        raise AssertionError(f"{mod} should have been removed")
+    assert not hasattr(core, "fft") and not hasattr(core, "blas")
 
 
 # -- the repro.bench benchmark-subsystem surface (ISSUE 4) ------------------

@@ -62,9 +62,10 @@ check("overlap_stencil", np.allclose(got, want, atol=1e-5))
 """
 
 INVOKE_BLAS_FFT = """
-from repro.core import (DeviceGroup, Policy, segment, gather, blas, fft,
+from repro.core import (DeviceGroup, Policy, segment, gather,
                         invoke_kernel, invoke_kernel_all, PassThrough,
                         barrier_fence)
+from repro.lib import blas, fft
 g = DeviceGroup.all_devices((8,), ("data",))
 
 x = np.random.randn(16, 4).astype(np.float32)

@@ -3,14 +3,10 @@
   * PlanCache behaviour: keying, LRU eviction, hit/miss counters,
     cross-group isolation;
   * plan-cached fft/blas correctness vs the direct math, including the
-    fused axpy+dot and dot+allreduce epilogues;
-  * the deprecated core.fft/core.blas shims warn (exactly once per
-    process) and forward;
+    fused axpy+dot, dot+allreduce and cg_update/xpby_dot epilogues;
   * the streaming engine's plan-cache report: frame 0 builds, steady
     state is all hits (4-device run lives in test_gridding.py).
 """
-
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -161,63 +157,62 @@ def test_blas_gemm_plans():
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims
+# fused cg_update / xpby_dot entries (the CG hot-path plans)
 # ---------------------------------------------------------------------------
 
-def test_core_fft_blas_shims_warn_and_forward():
-    from repro.core import blas as cblas
-    from repro.core import fft as cfft
-    # simulate a fresh process: the shims guard their warning so it
-    # fires exactly once per process per function, independent of the
-    # ambient warning filters
-    cblas._warned.clear()
-    cfft._warned.clear()
+def test_blas_cg_update_fused_matches_split():
+    """One plan-cached pass == the three-pass unfused update, on a
+    CLONE+NATURAL pytree (the (rho, chat) layout of NLINV)."""
+    from repro.core import Policy
     comm = Environment().subgroup(1)
-    x, y = comm.container(_mk(10)), comm.container(_mk(11))
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        z = cblas.axpy(2.0, x, y)
-        cblas.axpy(2.0, x, y)
-        k = cfft.fft2_batched(x, centered=True)
-        cfft.fft2_batched(x, centered=True)
-    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 2, [str(w.message) for w in deps]
-    assert {("axpy" in str(w.message), "fft2_batched" in str(w.message))
-            for w in deps} == {(True, False), (False, True)}
-    np.testing.assert_allclose(np.asarray(z.data),
-                               2.0 * np.asarray(x.data) + np.asarray(y.data),
-                               atol=1e-5)
-    np.testing.assert_allclose(
-        np.asarray(k.data),
-        np.asarray(lfft.fft2_batched(x, centered=True).data), atol=1e-6)
-    for name in ("axpy", "dot", "norm2", "gemm_batched", "gemm_ksplit"):
-        assert getattr(cblas, name).__deprecated__ == f"repro.lib.blas.{name}"
-    for name in ("fft2", "fft2_batched"):
-        assert getattr(cfft, name).__deprecated__ == f"repro.lib.fft.{name}"
+    cache = PlanCache()
+    mk = lambda s: {"rho": comm.container(_mk(s, (8, 8)),
+                                          policy=Policy.CLONE),
+                    "chat": comm.container(_mk(s + 1))}
+    p, ap, x, r = mk(20), mk(22), mk(24), mk(26)
+    alpha = 0.375
+    x2, r2, rs = lblas.cg_update(alpha, p, ap, x, r, cache=cache)
+    for kk in ("rho", "chat"):
+        np.testing.assert_allclose(
+            np.asarray(x2[kk].data),
+            np.asarray(x[kk].data) + alpha * np.asarray(p[kk].data),
+            atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(r2[kk].data),
+            np.asarray(r[kk].data) - alpha * np.asarray(ap[kk].data),
+            atol=1e-5)
+    want_rs = sum(float(np.vdot(np.asarray(r2[kk].data),
+                                np.asarray(r2[kk].data)).real)
+                  for kk in ("rho", "chat"))
+    np.testing.assert_allclose(float(rs), want_rs, rtol=1e-5)
+    # second call with the same layouts is a pure cache hit
+    lblas.cg_update(0.5, p, ap, x, r, cache=cache)
+    assert cache.hits == 1 and cache.misses == 1
 
 
-def test_core_fft_blas_shims_warn_once_per_process():
-    """The real per-process guarantee, in an actual fresh process: a hot
-    loop through a shim emits one DeprecationWarning total, even with
-    -W always-style filters."""
-    from helpers import run_with_devices
-    out = run_with_devices("""
-import warnings
-from repro.core import Environment
-from repro.core import blas as cblas, fft as cfft
-comm = Environment().subgroup(1)
-x = comm.container((np.random.randn(2, 8, 8)
-                    + 1j * np.random.randn(2, 8, 8)).astype(np.complex64))
-y = comm.container(np.asarray(x.data)[..., ::-1].copy())
-with warnings.catch_warnings(record=True) as rec:
-    warnings.simplefilter("always")
-    for _ in range(5):
-        cblas.axpy(2.0, x, y)
-        cfft.fft2_batched(x)
-deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-check("one_warning_per_shim", len(deps) == 2)
-""", ndev=1)
-    assert "ok: one_warning_per_shim" in out
+def test_blas_xpby_dot_fused_matches_split():
+    comm = Environment().subgroup(1)
+    x, y = comm.container(_mk(30)), comm.container(_mk(31))
+    beta = 0.625
+    w, d = lblas.xpby_dot(x, y, beta)
+    want = np.asarray(x.data) + beta * np.asarray(y.data)
+    np.testing.assert_allclose(np.asarray(w.data), want, atol=1e-5)
+    np.testing.assert_allclose(float(d), float(np.vdot(want, want).real),
+                               rtol=1e-5)
+
+
+def test_blas_tree_forms_shared_with_nlinv():
+    """operators.uaxpy/udot are the lib.blas tree forms — one
+    implementation for single-device and distributed paths."""
+    from repro.nlinv.operators import uaxpy, udot
+    x = {"rho": jnp.asarray(_mk(40, (4, 4))), "chat": jnp.asarray(_mk(41))}
+    y = {"rho": jnp.asarray(_mk(42, (4, 4))), "chat": jnp.asarray(_mk(43))}
+    got = uaxpy(0.5, x, y)
+    want = lblas.tree_axpy(0.5, x, y)
+    np.testing.assert_allclose(np.asarray(got["chat"]),
+                               np.asarray(want["chat"]), atol=1e-6)
+    np.testing.assert_allclose(complex(udot(x, y)),
+                               complex(lblas.tree_vdot(x, y)), rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------
