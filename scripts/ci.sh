@@ -9,13 +9,16 @@
 #                              #   devices (real multi-device mesh ambient;
 #                              #   subprocess-based tests manage their own
 #                              #   device counts either way)
-#   scripts/ci.sh bench        # tiny-CI benchmark sweep at 1 + 2 + 4
-#                              #   simulated devices -> BENCH_paper.json,
-#                              #   then repro.bench.compare gates
-#                              #   steady-state regressions vs the
-#                              #   committed baseline (and emits a
-#                              #   markdown table into the GitHub Actions
-#                              #   job summary when available)
+#   scripts/ci.sh bench        # benchmark sweep at 1 + 2 + 4 simulated
+#                              #   devices -> BENCH_paper.json: tiny size
+#                              #   for every figure plus paper-size fig5
+#                              #   transfer columns; repro.bench.compare
+#                              #   then gates steady-state regressions vs
+#                              #   the committed baseline, flags
+#                              #   non-monotone speedup_vs_1dev curves,
+#                              #   and emits a markdown table into the
+#                              #   GitHub Actions job summary when
+#                              #   available
 #   scripts/ci.sh full -k nlinv   # extra args are forwarded to pytest
 #   scripts/ci.sh -k nlinv        # (old form: tier defaults to all)
 set -euo pipefail
@@ -66,14 +69,18 @@ run_full() {
 }
 
 run_bench() {
-    echo "=== benchmark sweep (tiny-CI, 1 + 2 + 4 simulated devices) ==="
+    echo "=== benchmark sweep (tiny all-figures + paper fig5, 1 + 2 + 4 devices) ==="
+    # paper-size fig5 rides along so the transfer schedules are gated at
+    # a payload size where the schedule choice (scatter+allgather bcast,
+    # rs+ag reduce) actually matters, not only at tiny-CI sizes.
+    sweep="--sweep tiny:fig4,fig5,fig6,fig89,gridding,stream,table1 --sweep paper:fig5"
     base=""
     if [ -f BENCH_paper.json ]; then
         base="$(mktemp)"
         trap 'rm -f "$base"' EXIT     # cleaned up even when the gate fails
         cp BENCH_paper.json "$base"
     fi
-    python -m repro.bench.run --size tiny --devices 1,2,4 --out BENCH_paper.json
+    python -m repro.bench.run $sweep --devices 1,2,4 --out BENCH_paper.json
     if [ -n "$base" ]; then
         echo "=== regression gate vs committed baseline ==="
         # Threshold 75% + 1ms floor + calibration normalization + one
@@ -99,7 +106,7 @@ run_bench() {
         }
         if ! gate; then
             echo "=== gate failed; re-measuring once to rule out load ==="
-            python -m repro.bench.run --size tiny --devices 1,2,4 \
+            python -m repro.bench.run $sweep --devices 1,2,4 \
                 --out BENCH_paper.json
             if ! gate; then
                 if [ "${BENCH_STRICT:-0}" = "1" ]; then

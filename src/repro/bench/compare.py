@@ -44,6 +44,10 @@ class Comparison:
     threshold_pct: float
     min_ms: float
     scale: float = 1.0   # machine-speed normalization applied to `new`
+    # (scenario, size) groups in the NEW artifact whose speedup_vs_1dev
+    # drops anywhere as the device count grows (advisory: reported, not
+    # gated — the fig. 5 scaling-shape check)
+    non_monotone: list = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -87,7 +91,33 @@ def compare_artifacts(base: dict, new: dict, *,
             cmp.improvements.append(entry)
         else:
             cmp.unchanged.append(entry)
+    cmp.non_monotone = _non_monotone_speedups(new)
     return cmp
+
+
+def _non_monotone_speedups(art: dict) -> list:
+    """(scenario, size) groups whose ``speedup_vs_1dev`` DROPS anywhere
+    as the device count grows (1 device counts as speedup 1.0).  The
+    paper's fig. 5 point is that transfers should scale; a schedule that
+    gets slower with more devices shows up here even when it clears the
+    regression threshold."""
+    groups: dict = {}
+    for run in art["scenarios"].values():
+        sp = 1.0 if run["devices"] == 1 else run.get("speedup_vs_1dev")
+        if sp is None:
+            continue
+        groups.setdefault((run["scenario"], run["size"]), {})[
+            run["devices"]] = sp
+    out = []
+    for (scenario, size), by_dev in sorted(groups.items()):
+        devs = sorted(by_dev)
+        if len(devs) < 2:
+            continue
+        speeds = [by_dev[d] for d in devs]
+        if any(b < a for a, b in zip(speeds, speeds[1:])):
+            out.append({"key": f"{scenario}@{size}",
+                        "speedups": {f"d{d}": by_dev[d] for d in devs}})
+    return out
 
 
 def format_report(cmp: Comparison) -> str:
@@ -106,11 +136,17 @@ def format_report(cmp: Comparison) -> str:
         lines.append(f"  new        {key}")
     for key in cmp.missing:
         lines.append(f"  MISSING    {key} (in base, not in new)")
+    for entry in cmp.non_monotone:
+        curve = " -> ".join(f"{v:g} ({d})"
+                            for d, v in entry["speedups"].items())
+        lines.append(f"  NON-MONOTONE scaling {entry['key']}: {curve}")
     lines.append(
         f"  {len(cmp.unchanged)} unchanged, "
         f"{len(cmp.below_floor)} under the noise floor, "
         f"{len(cmp.improvements)} improved, {len(cmp.new)} new, "
-        f"{len(cmp.missing)} missing, {len(cmp.regressions)} regressions")
+        f"{len(cmp.missing)} missing, "
+        f"{len(cmp.non_monotone)} non-monotone scaling, "
+        f"{len(cmp.regressions)} regressions")
     return "\n".join(lines)
 
 
@@ -141,6 +177,13 @@ def format_markdown(cmp: Comparison) -> str:
         lines.append(f"| `{key}` | — | — | — | 🆕 new |")
     for key in cmp.missing:
         lines.append(f"| `{key}` | — | — | — | ⚠️ missing |")
+    if cmp.non_monotone:
+        lines += ["", "**Non-monotone `speedup_vs_1dev`** (scaling drops "
+                      "somewhere as devices grow):", ""]
+        for entry in cmp.non_monotone:
+            curve = " → ".join(f"{v:g} ({d})"
+                               for d, v in entry["speedups"].items())
+            lines.append(f"- `{entry['key']}`: {curve}")
     lines.append("")
     return "\n".join(lines)
 

@@ -2,7 +2,13 @@
 
   PYTHONPATH=src python -m repro.bench.run [--size tiny|paper]
       [--devices 1,4] [--only fig4,stream,...] [--out BENCH_paper.json]
-      [--iters N] [--warmup N] [--list]
+      [--sweep SIZE:FIG,FIG ...] [--iters N] [--warmup N] [--list]
+
+``--sweep SIZE:FIGURES`` (repeatable) runs several (size, figure-set)
+combinations in ONE artifact — e.g. ``--sweep tiny:fig4,fig5 --sweep
+paper:fig5`` gives the cheap tiny coverage everywhere plus paper-size
+columns for the transfer figures.  When present it replaces
+``--size``/``--only``.
 
 XLA locks the host device count at first JAX init, so the parent
 process never runs a scenario itself: it spawns one child per requested
@@ -52,6 +58,11 @@ def _parse_args(argv):
                          "the committed baseline by accident)")
     ap.add_argument("--out-dir", default=str(DEFAULT_OUT_DIR),
                     help="directory for side artifacts (latency reports)")
+    ap.add_argument("--sweep", action="append", default=[],
+                    metavar="SIZE:FIGURES",
+                    help="repeatable SIZE:FIG,FIG spec; when given, "
+                         "replaces --size/--only and every spec runs at "
+                         "every --devices count into one artifact")
     ap.add_argument("--iters", type=int, default=None,
                     help="steady-state samples per scenario (default by size)")
     ap.add_argument("--warmup", type=int, default=None,
@@ -70,6 +81,22 @@ def _figures(args):
     if args.only.strip().lower() == "all":
         return None
     return tuple(f.strip() for f in args.only.split(",") if f.strip())
+
+
+def _jobs(args) -> list[tuple[str, str]]:
+    """The (size, only) combinations this sweep runs — one child per
+    (job, device count).  Default: the single --size/--only pair."""
+    if not args.sweep:
+        return [(args.size, args.only)]
+    jobs = []
+    for spec in args.sweep:
+        size, sep, figs = spec.partition(":")
+        size = size.strip()
+        if not sep or size not in ("tiny", "paper") or not figs.strip():
+            raise SystemExit(f"repro.bench: bad --sweep spec {spec!r} "
+                             "(want SIZE:FIG,FIG with SIZE tiny|paper)")
+        jobs.append((size, figs.strip()))
+    return jobs
 
 
 def _sampling(args):
@@ -145,10 +172,11 @@ def _child_main(args) -> int:
 # parent: sweep device counts in subprocesses, merge, write artifact
 # ---------------------------------------------------------------------------
 
-def _spawn(args, ndev: int, emit: pathlib.Path) -> bool:
+def _spawn(args, ndev: int, size: str, only: str,
+           emit: pathlib.Path) -> bool:
     cmd = [sys.executable, "-m", "repro.bench.run", "--child",
-           "--devices", str(ndev), "--size", args.size,
-           "--only", args.only, "--out-dir", args.out_dir,
+           "--devices", str(ndev), "--size", size,
+           "--only", only, "--out-dir", args.out_dir,
            "--emit", str(emit)]
     if args.iters is not None:
         cmd += ["--iters", str(args.iters)]
@@ -199,9 +227,12 @@ def main(argv=None) -> int:
     from .artifact import make_artifact, write_artifact
     from .registry import figure_names
 
-    figures = _figures(args)
-    if figures is not None:
-        unknown = set(figures) - set(figure_names())
+    jobs = _jobs(args)
+    for _, only in jobs:
+        if only.strip().lower() == "all":
+            continue
+        figs = tuple(f.strip() for f in only.split(",") if f.strip())
+        unknown = set(figs) - set(figure_names())
         if unknown:
             raise SystemExit(f"repro.bench: unknown figure(s) "
                              f"{sorted(unknown)}; registered: "
@@ -212,25 +243,28 @@ def main(argv=None) -> int:
         raise SystemExit("repro.bench: --devices must name at least one count")
     partials, failures = [], []
     for ndev in counts:
-        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
-            emit = pathlib.Path(f.name)
-        try:
-            # a failed device count must not void the others' results
-            if _spawn(args, ndev, emit):
-                p = json.loads(emit.read_text())
-                partials.append(p)
-                failures += p.get("failures", [])
-            else:
-                failures.append(f"<{ndev}-device child>")
-        finally:
-            emit.unlink(missing_ok=True)
+        for size, only in jobs:
+            with tempfile.NamedTemporaryFile(suffix=".json",
+                                             delete=False) as f:
+                emit = pathlib.Path(f.name)
+            try:
+                # a failed child must not void the others' results
+                if _spawn(args, ndev, size, only, emit):
+                    p = json.loads(emit.read_text())
+                    partials.append(p)
+                    failures += p.get("failures", [])
+                else:
+                    failures.append(f"<{ndev}-device {size} child>")
+            finally:
+                emit.unlink(missing_ok=True)
 
     runs = [r for p in partials for r in p["runs"]]
     if not runs:
         raise SystemExit("repro.bench: the sweep produced no runs "
-                         "(every scenario failed or none matched "
-                         f"--size {args.size} / --devices {args.devices})")
-    host = dict(partials[0]["host"], size=args.size,
+                         "(every scenario failed or none matched the "
+                         f"requested sizes / --devices {args.devices})")
+    sizes = list(dict.fromkeys(size for size, _ in jobs))
+    host = dict(partials[0]["host"], size=",".join(sizes),
                 device_counts=counts)
     # best (fastest) reference across children = the machine's speed
     # with the least neighbor interference during this sweep

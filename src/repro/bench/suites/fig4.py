@@ -73,7 +73,7 @@ def gemm_ksplit(ctx):
     t = ctx.measure(f, sA, sB)
     # modeled: local matmul scales 1/G, then psum of the full (n, n)
     t1 = 2 * n ** 3 / HW["peak_flops_bf16"]
-    extra = {"n": n}
+    extra = {"n": n, "schedule": lblas.gemm_ksplit_schedule(sA, sB)}
     for G in (2, 4, 8):
         tG = t1 / G + models.allreduce_time(n * n * 4, G)
         extra[f"model_eff{G}"] = round(t1 / (G * tG), 3)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ...core import comm as _comm
 from ...core.runtime import HW
 from .. import models
 from ..registry import scenario
@@ -37,8 +38,9 @@ def strong_copy(ctx):
     """Fixed total payload scattered over the group (strong scaling)."""
     _, x = _payload(ctx)
     t = ctx.measure(lambda: ctx.comm.container(x).data)
-    extra = {"nbytes": x.nbytes, **_model_times(
-        lambda G: models.copy_time(x.nbytes / G, models.PCIE_BW))}
+    extra = {"nbytes": x.nbytes, "schedule": "host_shard_upload",
+             **_model_times(
+                 lambda G: models.copy_time(x.nbytes / G, models.PCIE_BW))}
     return {**t.as_dict(), "extra": extra}
 
 
@@ -48,8 +50,10 @@ def weak_copy(ctx):
     p, x = _payload(ctx)
     one = x[:1]
     t = ctx.measure(lambda: ctx.comm.container(one).data)
-    extra = {"nbytes": one.nbytes, **_model_times(
-        lambda G: models.copy_time(x.nbytes / p["batch"], models.PCIE_BW))}
+    extra = {"nbytes": one.nbytes, "schedule": "host_shard_upload",
+             **_model_times(
+                 lambda G: models.copy_time(x.nbytes / p["batch"],
+                                            models.PCIE_BW))}
     return {**t.as_dict(), "extra": extra}
 
 
@@ -59,9 +63,13 @@ def broadcast(ctx):
     _, x = _payload(ctx)
     one = x[0]
     t = ctx.measure(lambda: ctx.comm.bcast(one).data)
-    extra = {"nbytes": one.nbytes, **_model_times(
-        lambda G: models.copy_time(one.nbytes, models.PCIE_BW)
-        + (G - 1) * one.nbytes / HW["ici_bw"])}
+    sched = _comm.bcast_schedule(ctx.comm.group, ctx.comm.mesh_axes,
+                                 one.nbytes)
+    extra = {"nbytes": one.nbytes, "schedule": sched,
+             "threshold_bytes": _comm.BCAST_SCATTER_MIN_BYTES,
+             **_model_times(
+                 lambda G: models.copy_time(one.nbytes, models.PCIE_BW)
+                 + (G - 1) * one.nbytes / HW["ici_bw"])}
     return {**t.as_dict(), "extra": extra}
 
 
@@ -72,7 +80,11 @@ def reduce(ctx):
     sm = ctx.comm.container(x)
     one = x[0].nbytes
     t = ctx.measure(lambda: ctx.comm.reduce(sm))
-    extra = {"nbytes": one, **_model_times(
-        lambda G: models.allreduce_time(one, G) / 2
-        + models.copy_time(one, models.PCIE_BW))}
+    sched, nbytes = _comm._reduce_schedule(sm, "sum")
+    extra = {"nbytes": one, "schedule": sched,
+             "payload_bytes": nbytes,
+             "threshold_bytes": _comm.REDUCE_RS_AG_MIN_BYTES,
+             **_model_times(
+                 lambda G: models.allreduce_time(one, G) / 2
+                 + models.copy_time(one, models.PCIE_BW))}
     return {**t.as_dict(), "extra": extra}

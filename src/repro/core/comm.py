@@ -19,6 +19,33 @@ single-program execution and degenerates to the local math).  This is
 what lets whole algorithms — NLINV's Newton/CG loop — be written once
 against the verbs and launched either way.
 
+Transfer schedules (ISSUE 6)
+----------------------------
+Every eager verb compiles its shard_map program ONCE per layout through
+the shared :class:`repro.core.plan.PlanCache` (key: verb + ``seg_token``
++ the chosen schedule + its size threshold), so the steady state of a
+frame loop dispatches a cached executable instead of re-tracing.  On top
+of plan caching, the schedules themselves are topology/bandwidth-aware:
+
+* ``broadcast`` above ``BCAST_SCATTER_MIN_BYTES`` uploads 1/n of the
+  payload per device and replicates on-fabric with chunked all-gathers,
+  minor-to-major (ICI submesh first, DCN across) — instead of shipping
+  the full array to every device from the host;
+* ``copy`` picks a direct collective per (src, dst) layout pair (see
+  ``copy_route``) and only falls back to the gather-then-resegment
+  round-trip for genuinely global relayouts;
+* ``reduce``/``allreduce`` payloads above ``REDUCE_RS_AG_MIN_BYTES``
+  decompose Rabenseifner-style into reduce-scatter + all-gather
+  (each link carries ~2·(n-1)/n of one payload instead of n-1 full
+  payloads in the naive tree).
+
+The bandwidth-splitting decompositions fire only on discrete-memory
+platforms: on the host-simulated CPU mesh (``group.unified_memory``)
+every device shares host RAM, so direct ``device_put``/``psum`` already
+moves the minimum bytes and the decompositions would only add collective
+rounds.  ``BCAST_SCHEDULE``/``REDUCE_SCHEDULE`` force a choice (parity
+tests exercise both schedules everywhere).
+
 These module-level functions are the verb *implementations*; the stable
 public surface is the group-bound method set of ``env.Communicator``
 (and the fluent forms on ``SegmentedArray``), for which the re-exports
@@ -27,18 +54,22 @@ in ``repro.core`` are deprecated shims.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from . import compat
+from .plan import Plan, PlanCache, default_cache, group_token, seg_token
 from .runtime import DeviceGroup, current_group
-from .segmented import Policy, SegmentedArray, _pad_to, gather, segment
+from .segmented import (Policy, SegmentedArray, _block_cyclic_perm, _pad_to,
+                        gather, segment)
 
 # re-export container-level scatter/gather as comm verbs (Fig. 3 naming)
 scatter = segment
@@ -52,29 +83,237 @@ _REDUCERS = {
 
 _ELEMWISE = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
+# schedule size thresholds (bytes).  Both are recorded in the PlanCache
+# key and the plan meta, so changing them (or monkeypatching in a test)
+# builds a distinct plan instead of silently reusing the old schedule.
+BCAST_SCATTER_MIN_BYTES = 1 << 16   # below: host device_put replicate
+REDUCE_RS_AG_MIN_BYTES = 1 << 16    # below: flat psum
+BCAST_CHUNKS = 4                    # independent in-flight fan-out payloads
 
-def broadcast(x, group: DeviceGroup | None = None) -> SegmentedArray:
-    """Broadcast a local array to every device (-> CLONE container)."""
-    return segment(x, group, policy=Policy.CLONE)
+# Schedule overrides (None = topology-aware auto).  Auto picks the
+# decomposed schedules only on discrete-memory platforms
+# (``group.unified_memory`` False) AND above the size thresholds; on the
+# host-simulated CPU mesh every device shares host RAM, so direct
+# ``device_put``/``psum`` is bandwidth-optimal and the decompositions
+# only add collective rounds.  Tests and experiments force a schedule by
+# setting these module flags:
+#   comm.BCAST_SCHEDULE  in {None, "device_put", "scatter_allgather"}
+#   comm.REDUCE_SCHEDULE in {None, "psum", "rs_ag"}
+BCAST_SCHEDULE: str | None = None
+REDUCE_SCHEDULE: str | None = None
 
 
 def _axis_arg(mesh_axes: Sequence[str]):
     return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
 
 
-def reduce(seg: SegmentedArray, op: str = "sum") -> jax.Array:
+def _axspec(mesh_axes: Sequence[str]):
+    """The PartitionSpec slot for one dim sharded over ``mesh_axes``."""
+    return tuple(mesh_axes) if len(mesh_axes) > 1 else mesh_axes[0]
+
+
+def _plan(key: tuple, build_fn: Callable, *, op: str, meta: dict | None = None,
+          cache: PlanCache | None = None) -> Plan:
+    """Look up / build a transfer plan in the (shared) plan cache."""
+    cache = default_cache() if cache is None else cache
+    md = dict(meta or {})
+
+    def build():
+        return Plan(key=key, fn=build_fn(), lib="core", op=op, meta=md)
+
+    return cache.get_or_build(key, build)
+
+
+def _linear_index(mesh_axes: Sequence[str], group: DeviceGroup):
+    """This device's rank linearized over ``mesh_axes`` (major-to-minor,
+    matching how a PartitionSpec slot ``(a1, a2)`` splits a dim); call
+    inside a shard_map body."""
+    i = 0
+    for a in mesh_axes:
+        i = i * group.mesh.shape[a] + lax.axis_index(a)
+    return i
+
+
+def _psum_rs_ag(x: jax.Array, mesh_axes: Sequence[str]) -> jax.Array:
+    """psum decomposed Rabenseifner-style: reduce-scatter then all-gather
+    along dim 0 — each link carries ~2·(n-1)/n of one payload instead of
+    the naive tree's (n-1) full payloads.  Call inside a shard_map body;
+    dim 0 must tile over the product of ``mesh_axes`` (the plan layer
+    checks this before choosing the schedule)."""
+    for a in mesh_axes:
+        x = lax.psum_scatter(x, a, scatter_dimension=0, tiled=True)
+    for a in reversed(mesh_axes):
+        x = lax.all_gather(x, a, axis=0, tiled=True)
+    return x
+
+
+def bcast_schedule(group: DeviceGroup, mesh_axes: Sequence[str],
+                   nbytes: int) -> str:
+    """The broadcast schedule for this (group, payload):
+    ``scatter_allgather`` on discrete-memory platforms above
+    ``BCAST_SCATTER_MIN_BYTES``, else the direct replicated
+    ``device_put``.  ``BCAST_SCHEDULE`` forces a choice."""
+    if group.axis_size(*mesh_axes) == 1:
+        return "device_put"
+    if BCAST_SCHEDULE is not None:
+        return BCAST_SCHEDULE
+    if group.unified_memory or nbytes < BCAST_SCATTER_MIN_BYTES:
+        return "device_put"
+    return "scatter_allgather"
+
+
+def _reduce_schedule(seg: SegmentedArray, op: str) -> tuple[str, int]:
+    """Pick the reduction schedule for a merged payload: ``rs_ag`` when
+    the group has discrete memories, the payload is big enough and its
+    leading dim tiles over the group, else a flat ``psum``.
+    ``REDUCE_SCHEDULE`` forces a choice (tiling still required).
+    Returns (schedule, payload_bytes)."""
+    merged = [d for i, d in enumerate(seg.data.shape) if i != seg.dim]
+    nbytes = int(math.prod(merged)) * seg.data.dtype.itemsize
+    eligible = (op == "sum" and seg.nseg > 1 and bool(merged)
+                and merged[0] % seg.nseg == 0)
+    if REDUCE_SCHEDULE is not None:
+        return (("rs_ag" if REDUCE_SCHEDULE == "rs_ag" and eligible
+                 else "psum"), nbytes)
+    if (eligible and not seg.group.unified_memory
+            and nbytes >= REDUCE_RS_AG_MIN_BYTES):
+        return "rs_ag", nbytes
+    return "psum", nbytes
+
+
+# ---------------------------------------------------------------------------
+# broadcast (paper Fig. 3/5): host upload + on-fabric replication
+# ---------------------------------------------------------------------------
+
+def plan_broadcast(shape, dtype, group: DeviceGroup,
+                   mesh_axes: tuple[str, ...],
+                   cache: PlanCache | None = None) -> Plan:
+    """Plan the scatter+all-gather broadcast: the caller uploads the
+    flattened payload sharded 1/n per device; the plan's ``fn``
+    replicates it with chunked tiled all-gathers, minor-to-major mesh
+    axis — so with the conventional DCN-major mesh the submesh assembles
+    over ICI first and only assembled slabs cross the DCN boundary."""
+    nseg = group.axis_size(*mesh_axes)
+    size = int(math.prod(shape))
+    padded = math.ceil(size / nseg) * nseg
+    shard = padded // nseg
+    chunks = next(c for c in (BCAST_CHUNKS, 2, 1) if shard % c == 0 and c <= shard)
+    key = ("transfer", "bcast", tuple(shape), str(jnp.dtype(dtype)),
+           group_token(group), tuple(mesh_axes),
+           BCAST_SCATTER_MIN_BYTES, chunks)
+
+    def build():
+        order = tuple(reversed(mesh_axes))   # minor-to-major: inverts split
+
+        def gather_all(v):
+            for a in order:
+                v = lax.all_gather(v, a, axis=0, tiled=True)
+            return v
+
+        def body(v):
+            if chunks == 1:
+                return gather_all(v)
+            # independent in-flight fan-out rounds the scheduler can
+            # pipeline; re-interleave to restore global order.
+            gathered = [gather_all(p) for p in jnp.split(v, chunks, axis=0)]
+            parts = [g.reshape(nseg, -1) for g in gathered]
+            return jnp.concatenate(parts, axis=1).reshape(-1)
+
+        sm = compat.shard_map(body, mesh=group.mesh,
+                              in_specs=P(_axspec(mesh_axes)), out_specs=P(),
+                              check_vma=False)
+
+        def fn(v):
+            return sm(v)[:size].reshape(shape)
+
+        return jax.jit(fn)
+
+    ici = tuple(a for a in mesh_axes if a in group.ici_axes)
+    dcn = tuple(a for a in mesh_axes if a in group.dcn_axes)
+    return _plan(key, build, op="bcast", cache=cache,
+                 meta={"schedule": "scatter_allgather", "chunks": chunks,
+                       "threshold_bytes": BCAST_SCATTER_MIN_BYTES,
+                       "ici_axes": ici, "dcn_axes": dcn})
+
+
+def broadcast(x, group: DeviceGroup | None = None, *,
+              mesh_axes: tuple[str, ...] = ("data",),
+              cache: PlanCache | None = None) -> SegmentedArray:
+    """Broadcast a local array to every device (-> CLONE container).
+
+    Small payloads (or 1-device groups) replicate directly from the host
+    (``segment(..., CLONE)``: n× the bytes over the host link).  Above
+    ``BCAST_SCATTER_MIN_BYTES`` the host uploads only 1/n per device and
+    the replication happens on-fabric via ``plan_broadcast``'s chunked
+    hierarchical all-gather schedule.
+    """
+    group = current_group(group)
+    mesh_axes = tuple(mesh_axes)
+    nseg = group.axis_size(*mesh_axes)
+    if isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer):
+        xh = x
+    elif isinstance(x, jax.core.Tracer):
+        return segment(x, group, policy=Policy.CLONE, mesh_axes=mesh_axes)
+    else:
+        xh = np.asarray(x)
+        dt = jax.dtypes.canonicalize_dtype(xh.dtype)
+        if xh.dtype != dt:
+            xh = xh.astype(dt)
+    nbytes = int(math.prod(xh.shape)) * xh.dtype.itemsize
+    if (xh.ndim == 0
+            or bcast_schedule(group, mesh_axes, nbytes) == "device_put"):
+        return segment(xh, group, policy=Policy.CLONE, mesh_axes=mesh_axes)
+    plan = plan_broadcast(xh.shape, xh.dtype, group, mesh_axes, cache=cache)
+    size = int(math.prod(xh.shape))
+    padded = math.ceil(size / nseg) * nseg
+    if isinstance(xh, jax.Array):
+        flat = jnp.pad(jnp.ravel(xh), (0, padded - size))
+    else:
+        flat = np.pad(np.ravel(xh), (0, padded - size))
+    shards = jax.device_put(flat, group.sharding(P(_axspec(mesh_axes))))
+    data = plan(shards)
+    return SegmentedArray(data, group, Policy.CLONE, 0, mesh_axes,
+                          orig_len=xh.shape[0])
+
+
+def plan_reduce(seg: SegmentedArray, op: str = "sum",
+                cache: PlanCache | None = None) -> Plan:
+    """Plan the eager ``reduce``: one jitted shard_map program per
+    (layout, op, schedule).  Large sum payloads whose leading merged dim
+    tiles over the group go reduce-scatter + all-gather (Rabenseifner);
+    everything else is a flat psum/pmax/pmin.  ``meta`` records the
+    choice for bench artifacts."""
+    schedule, nbytes = _reduce_schedule(seg, op)
+    key = ("transfer", "reduce", seg_token(seg), op, schedule,
+           REDUCE_RS_AG_MIN_BYTES)
+
+    def build():
+        pcoll, jred = _REDUCERS[op]
+        maxes = tuple(seg.mesh_axes)
+        sdim = seg.dim
+
+        def body(x):
+            x = jred(x, axis=sdim)
+            if schedule == "rs_ag":
+                return _psum_rs_ag(x, maxes)
+            return pcoll(x, _axis_arg(maxes))
+
+        out_spec = P(*[None] * (seg.data.ndim - 1))
+        sm = compat.shard_map(body, mesh=seg.group.mesh, in_specs=seg.pspec,
+                              out_specs=out_spec, check_vma=False)
+        return jax.jit(sm)
+
+    return _plan(key, build, op="reduce", cache=cache,
+                 meta={"schedule": schedule, "payload_bytes": nbytes,
+                       "threshold_bytes": REDUCE_RS_AG_MIN_BYTES})
+
+
+def reduce(seg: SegmentedArray, op: str = "sum",
+           cache: PlanCache | None = None) -> jax.Array:
     """Merge the segments elementwise into one local array (paper Fig. 3/5:
     'reduce merges one matrix per GPU' — the segmented dim is reduced).
     """
-    pcoll, jred = _REDUCERS[op]
-
-    def body(x):
-        x = jred(x, axis=seg.dim)
-        return pcoll(x, _axis_arg(seg.mesh_axes))
-
-    out_spec = P(*[None] * (seg.data.ndim - 1))
-    return compat.shard_map(body, mesh=seg.group.mesh,
-                            in_specs=seg.pspec, out_specs=out_spec)(seg.data)
+    return plan_reduce(seg, op, cache=cache)(seg.data)
 
 
 def all_reduce(seg: SegmentedArray, op: str = "sum",
@@ -136,16 +375,36 @@ def all_reduce_window(x, window=None, *, op: str = "sum",
                 f"eager all_reduce_window reduces the segmented dim "
                 f"({seg.dim}); got reduce_dim={rdim}")
         maxes = tuple(seg.mesh_axes)
-        body = partial(_all_reduce_window_local, window=window, op=op,
-                       axis=_axis_arg(maxes), reduce_dim=rdim,
-                       hierarchical=hierarchical, window_axes=window_axes,
-                       p2p=p2p, group=seg.group, mesh_axes=maxes)
-        out_spec = P(*[None] * (seg.data.ndim - 1))
-        # check_vma=False: the windowed scatter-into-zeros defeats JAX's
-        # replication inference even though the result is replicated.
-        out = compat.shard_map(body, mesh=seg.group.mesh, in_specs=seg.pspec,
-                               out_specs=out_spec,
-                               check_vma=False)(seg.data)
+        plain = window is None and not p2p and not hierarchical
+        schedule, nbytes = (_reduce_schedule(seg, op) if plain
+                            else ("psum", None))
+        wkey = (None if window is None
+                else tuple(tuple(w) for w in window))
+        wxkey = None if window_axes is None else tuple(window_axes)
+        key = ("transfer", "allreduce", seg_token(seg), wkey, wxkey, op,
+               rdim, bool(hierarchical), bool(p2p), schedule,
+               REDUCE_RS_AG_MIN_BYTES)
+
+        def build():
+            body = partial(_all_reduce_window_local, window=window, op=op,
+                           axis=_axis_arg(maxes), reduce_dim=rdim,
+                           hierarchical=hierarchical, window_axes=window_axes,
+                           p2p=p2p, group=seg.group, mesh_axes=maxes,
+                           rs_ag=(schedule == "rs_ag"))
+            out_spec = P(*[None] * (seg.data.ndim - 1))
+            # check_vma=False: the windowed scatter-into-zeros defeats
+            # JAX's replication inference though the result is replicated.
+            sm = compat.shard_map(body, mesh=seg.group.mesh,
+                                  in_specs=seg.pspec, out_specs=out_spec,
+                                  check_vma=False)
+            return jax.jit(sm)
+
+        plan = _plan(key, build, op="allreduce",
+                     meta={"schedule": schedule, "payload_bytes": nbytes,
+                           "threshold_bytes": REDUCE_RS_AG_MIN_BYTES,
+                           "window": wkey, "p2p": p2p,
+                           "hierarchical": hierarchical})
+        out = plan(seg.data)
         return SegmentedArray(out, seg.group, Policy.CLONE, 0, maxes)
     return _all_reduce_window_local(x, window=window, op=op, axis=axis,
                                     reduce_dim=reduce_dim,
@@ -156,7 +415,7 @@ def all_reduce_window(x, window=None, *, op: str = "sum",
 
 def _all_reduce_window_local(x, *, window, op, axis, reduce_dim,
                              hierarchical, window_axes, group, mesh_axes,
-                             p2p=False):
+                             p2p=False, rs_ag=False):
     pcoll, jred = _REDUCERS[op]
     if p2p and hierarchical:
         raise ValueError("p2p and hierarchical are mutually exclusive "
@@ -180,6 +439,9 @@ def _all_reduce_window_local(x, *, window, op, axis, reduce_dim,
                                   group.axis_size(*mesh_axes), op=op)
         if hierarchical and op == "sum" and group is not None and mesh_axes:
             return hierarchical_psum(v, group, mesh_axes)
+        if rs_ag and op == "sum" and mesh_axes:
+            # plan layer already checked dim-0 tiles over the group
+            return _psum_rs_ag(v, tuple(mesh_axes))
         return pcoll(v, axis)
 
     if window is None:
@@ -491,49 +753,304 @@ def all_gather(x, *, dim: int | None = None, axis=None, tiled: bool = True):
                           tiled=tiled)
 
 
-def copy(src: SegmentedArray, *, policy: Policy | None = None,
-         dim: int | None = None,
-         mesh_axes: tuple[str, ...] | None = None,
-         block: int | None = None, halo: int | None = None) -> SegmentedArray:
-    """Segmented-to-segmented copy (paper Fig. 3), i.e. re-segmentation.
+# ---------------------------------------------------------------------------
+# copy (paper Fig. 3): re-segmentation via direct per-layout collectives
+# ---------------------------------------------------------------------------
 
-    Same policy/dim -> pure device-to-device copy; otherwise XLA inserts
-    the minimal collective (all-gather / all-to-all / permute) — the
-    library's job in the paper of picking the best transfer path.
+_SPLIT = (Policy.NATURAL, Policy.OVERLAP2D)
 
-    Metadata is validated and rebuilt for the destination layout: a
-    block-cyclic endpoint, a change of segmented dim, or re-splitting a
-    CLONE (whose data was never padded for the new dim) all go through
-    the logical array so ``orig_len``/``block``/``halo`` stay truthful.
-    """
+
+def _copy_resolve(src, policy, dim, mesh_axes, block, halo):
+    """Fill defaults from ``src`` and validate the destination layout."""
     policy = src.policy if policy is None else policy
     dim = src.dim if dim is None else dim
-    mesh_axes = src.mesh_axes if mesh_axes is None else mesh_axes
+    mesh_axes = tuple(src.mesh_axes if mesh_axes is None else mesh_axes)
     if policy is Policy.BLOCK:
         block = src.block if block is None else block
         if block is None:
             raise ValueError("copy to BLOCK requires block=")
+    else:
+        block = None
     if halo is not None and policy is not Policy.OVERLAP2D:
         raise ValueError("halo= is only meaningful for OVERLAP2D targets")
     if halo is None and policy is Policy.OVERLAP2D:
         halo = src.halo
+    halo = halo if policy is Policy.OVERLAP2D else 0
+    return policy, dim, mesh_axes, block, halo
 
-    if (Policy.BLOCK in (policy, src.policy) or dim != src.dim
-            or tuple(mesh_axes) != tuple(src.mesh_axes)
-            or (src.policy is Policy.CLONE and policy is not Policy.CLONE)):
-        # element order (block-cyclic) or padding metadata changes:
-        # rebuild from the logical array so the ctor re-derives it.
+
+def _block_aligned(total: int, nseg: int, block: int) -> bool:
+    """Can NATURAL<->BLOCK re-segmentation run as one uniform tiled
+    all_to_all?  Needs the padded length to tile into ``nseg*block``
+    (both layouts then share the same physical length) and the
+    blocks-per-rank count to tile into ``nseg`` (uniform send counts)."""
+    if total % (nseg * block) != 0:
+        return False
+    return (total // (nseg * block)) % nseg == 0
+
+
+def _copy_route(src: SegmentedArray, policy, dim, mesh_axes, block,
+                halo) -> str:
+    sp = src.policy
+    if mesh_axes != tuple(src.mesh_axes):
+        return "rebuild"                      # group re-layout: global
+    unpadded = (src.orig_len is None
+                or src.orig_len == src.data.shape[src.dim])
+    if sp is Policy.CLONE:
+        if policy is Policy.CLONE:
+            if dim == src.dim:
+                return "alias"
+            return "meta" if unpadded else "rebuild"
+        return "clone_split"                  # local slice, no collective
+    if policy is Policy.CLONE:
+        return "replicate" if sp in _SPLIT and dim == src.dim else "rebuild"
+    if sp in _SPLIT and policy in _SPLIT:
+        return "meta" if dim == src.dim else "alltoall"
+    if dim != src.dim:
+        return "rebuild"                      # BLOCK endpoint + dim change
+    if sp in _SPLIT and policy is Policy.BLOCK:
+        return ("block_pack"
+                if _block_aligned(src.data.shape[dim], src.nseg, block)
+                else "rebuild")
+    if sp is Policy.BLOCK and policy in _SPLIT:
+        return ("block_unpack"
+                if _block_aligned(src.data.shape[dim], src.nseg, src.block)
+                else "rebuild")
+    if sp is Policy.BLOCK and policy is Policy.BLOCK:
+        return "alias" if block == src.block else "rebuild"
+    return "rebuild"
+
+
+def copy_route(src: SegmentedArray, *, policy: Policy | None = None,
+               dim: int | None = None,
+               mesh_axes: tuple[str, ...] | None = None,
+               block: int | None = None, halo: int | None = None) -> str:
+    """The transfer schedule ``copy`` would pick for this re-segmentation
+    (introspection for tests and bench reports):
+
+    ``alias``         same layout — metadata only, zero bytes moved
+    ``meta``          layout-compatible relabel (NATURAL<->OVERLAP2D,
+                      halo-only change, CLONE dim change) — zero bytes
+    ``clone_split``   CLONE -> split: every replica slices its own
+                      segment locally, no collective
+    ``replicate``     split -> CLONE: tiled all-gathers, minor-to-major
+    ``alltoall``      segmented-dim change: one tiled all_to_all
+    ``block_pack``    NATURAL -> BLOCK aligned: one uniform all_to_all
+    ``block_unpack``  BLOCK -> NATURAL aligned: one uniform all_to_all
+    ``rebuild``       fallback through the logical array (gather +
+                      re-segment) for genuinely global relayouts
+    """
+    policy, dim, mesh_axes, block, halo = _copy_resolve(
+        src, policy, dim, mesh_axes, block, halo)
+    return _copy_route(src, policy, dim, mesh_axes, block, halo)
+
+
+def _plan_clone_split(src, policy, dim, mesh_axes, block, halo, cache):
+    """CLONE -> split: the data is already replicated, so every device
+    pads/permutes locally and slices out its own segment — communication
+    free (the old path gathered and re-uploaded the full logical array).
+    """
+    key = ("transfer", "copy", "clone_split", seg_token(src), policy.value,
+           dim, mesh_axes, block)
+    group, nseg = src.group, src.nseg
+    shape = src.data.shape
+    sdim, sorig = src.dim, src.orig_len
+
+    def build():
+        def fn(x):
+            if sorig is not None and sorig != shape[sdim]:
+                x = lax.slice_in_dim(x, 0, sorig, axis=sdim)
+            if policy is Policy.BLOCK:
+                x, _ = _pad_to(x, dim, nseg * block)
+                perm = _block_cyclic_perm(x.shape[dim], nseg, block)
+                x = jnp.take(x, jnp.asarray(perm), axis=dim)
+            else:
+                x, _ = _pad_to(x, dim, nseg)
+            per = x.shape[dim] // nseg
+
+            def body(v):
+                i = _linear_index(mesh_axes, group)
+                return lax.dynamic_slice_in_dim(v, i * per, per, axis=dim)
+
+            spec = [None] * x.ndim
+            spec[dim] = _axspec(mesh_axes)
+            sm = compat.shard_map(body, mesh=group.mesh, in_specs=P(),
+                                  out_specs=P(*spec), check_vma=False)
+            return sm(x)
+
+        return jax.jit(fn)
+
+    return _plan(key, build, op="copy", cache=cache,
+                 meta={"schedule": "clone_split"})
+
+
+def _plan_replicate(src, cache):
+    """split -> CLONE: tiled all-gathers minor-to-major (ICI submesh
+    assembly first, DCN across) instead of a host-staged resharding."""
+    key = ("transfer", "copy", "replicate", seg_token(src))
+    mesh_axes = tuple(src.mesh_axes)
+    sdim = src.dim
+
+    def build():
+        def body(v):
+            for a in reversed(mesh_axes):
+                v = lax.all_gather(v, a, axis=sdim, tiled=True)
+            return v
+
+        sm = compat.shard_map(body, mesh=src.group.mesh, in_specs=src.pspec,
+                              out_specs=P(), check_vma=False)
+        return jax.jit(sm)
+
+    return _plan(key, build, op="copy", cache=cache,
+                 meta={"schedule": "replicate"})
+
+
+def _plan_block_exchange(src, block: int, pack: bool, cache):
+    """Aligned NATURAL<->BLOCK re-segmentation as ONE uniform tiled
+    all_to_all (the direct block-cyclic exchange; the ppermute pattern
+    batched into a single collective).
+
+    With ``m`` blocks per rank (``m % nseg == 0``), the target rank of a
+    NATURAL rank's local block ``j`` is ``j % nseg`` and its landing
+    position is source-major — both rank-independent, so send/receive
+    sides are static reshapes around one collective.  The inverse
+    (unpack) sends contiguous ``m/nseg``-block chunks and interleaves
+    the received slabs back into natural order.
+    """
+    key = ("transfer", "copy", "block_pack" if pack else "block_unpack",
+           seg_token(src), block)
+    mesh_axes = tuple(src.mesh_axes)
+    ax = _axis_arg(mesh_axes)
+    nseg = src.nseg
+    dim = src.dim
+    m = src.data.shape[dim] // (nseg * block)   # blocks per rank
+
+    def build():
+        def body(xl):
+            xm = jnp.moveaxis(xl, dim, 0)        # (m*block, ...)
+            rest = xm.shape[1:]
+            if pack:
+                t = xm.reshape(m // nseg, nseg, block, *rest)
+                t = jnp.moveaxis(t, 1, 0).reshape(m * block, *rest)
+                r = lax.all_to_all(t, ax, split_axis=0, concat_axis=0,
+                                   tiled=True)
+            else:
+                r = lax.all_to_all(xm, ax, split_axis=0, concat_axis=0,
+                                   tiled=True)
+                r = r.reshape(nseg, m // nseg, block, *rest)
+                r = jnp.moveaxis(r, 0, 1).reshape(m * block, *rest)
+            return jnp.moveaxis(r, 0, dim)
+
+        sm = compat.shard_map(body, mesh=src.group.mesh, in_specs=src.pspec,
+                              out_specs=src.pspec, check_vma=False)
+        return jax.jit(sm)
+
+    return _plan(key, build, op="copy", cache=cache,
+                 meta={"schedule": "block_pack" if pack else "block_unpack",
+                       "block": block, "blocks_per_rank": m})
+
+
+def copy(src: SegmentedArray, *, policy: Policy | None = None,
+         dim: int | None = None,
+         mesh_axes: tuple[str, ...] | None = None,
+         block: int | None = None, halo: int | None = None,
+         cache: PlanCache | None = None) -> SegmentedArray:
+    """Segmented-to-segmented copy (paper Fig. 3), i.e. re-segmentation.
+
+    The schedule is picked per (src, dst) layout pair — see
+    ``copy_route`` for the full table.  Layout-compatible relabels
+    (halo-only OVERLAP2D changes, NATURAL<->OVERLAP2D on the same dim)
+    move zero bytes; CLONE re-splits slice locally; dim changes run one
+    ``all_to_all``; aligned BLOCK endpoints run one uniform exchange.
+    Only genuinely global relayouts (mesh-axes change, unaligned
+    block-cyclic, padded CLONE re-dim) still round-trip the logical
+    array.  Direct schedules preserve the source's physical padding
+    (``orig_len`` metadata stays truthful, but the padded extent may
+    exceed the canonical minimum the ctor would pick).
+    """
+    policy, dim, mesh_axes, block, halo = _copy_resolve(
+        src, policy, dim, mesh_axes, block, halo)
+    route = _copy_route(src, policy, dim, mesh_axes, block, halo)
+
+    if route == "rebuild":
         return segment(gather(src), src.group, policy=policy, dim=dim,
-                       mesh_axes=mesh_axes, block=block,
-                       halo=0 if halo is None else halo)
+                       mesh_axes=mesh_axes, block=block, halo=halo)
+    if route == "alias":
+        return dataclasses.replace(src, policy=policy, dim=dim,
+                                   mesh_axes=mesh_axes, block=block,
+                                   halo=halo)
+    if route == "meta":
+        if src.policy is Policy.CLONE:      # CLONE dim change (unpadded)
+            return dataclasses.replace(src, dim=dim,
+                                       orig_len=src.data.shape[dim])
+        return dataclasses.replace(src, policy=policy, halo=halo)
+    if route == "clone_split":
+        plan = _plan_clone_split(src, policy, dim, mesh_axes, block, halo,
+                                 cache)
+        new_orig = (src.orig_len if dim == src.dim and src.orig_len is not None
+                    else src.data.shape[dim])
+        return SegmentedArray(plan(src.data), src.group, policy, dim,
+                              mesh_axes, orig_len=new_orig, block=block,
+                              halo=halo)
+    if route == "replicate":
+        plan = _plan_replicate(src, cache)
+        return SegmentedArray(plan(src.data), src.group, Policy.CLONE, dim,
+                              mesh_axes, orig_len=src.orig_len)
+    if route == "alltoall":
+        work = src if src.policy is Policy.NATURAL else dataclasses.replace(
+            src, policy=Policy.NATURAL, halo=0)
+        res = all_to_all(work, dim, cache=cache)
+        return dataclasses.replace(res, policy=policy, halo=halo)
+    if route in ("block_pack", "block_unpack"):
+        pack = route == "block_pack"
+        plan = _plan_block_exchange(src, block if pack else src.block,
+                                    pack, cache)
+        orig = (src.orig_len if src.orig_len is not None
+                else src.data.shape[dim])
+        return SegmentedArray(plan(src.data), src.group, policy, dim,
+                              mesh_axes, orig_len=orig, block=block,
+                              halo=halo)
+    raise AssertionError(f"unknown copy route {route!r}")
 
-    new_halo = halo if policy is Policy.OVERLAP2D else 0
-    dst = SegmentedArray(src.data, src.group, policy, dim, mesh_axes,
-                         orig_len=src.orig_len, block=None, halo=new_halo)
-    return dst.with_data(jax.device_put(src.data, dst.sharding))
+
+def plan_all_to_all(seg: SegmentedArray, new_dim: int,
+                    cache: PlanCache | None = None) -> Plan:
+    """Plan the all_to_all re-segmentation (pad + one tiled collective +
+    old-dim padding slice, jitted as one program)."""
+    key = ("transfer", "all_to_all", seg_token(seg), int(new_dim))
+    mesh_axes = tuple(seg.mesh_axes)
+    ax = _axis_arg(mesh_axes)
+    nseg = seg.nseg
+    sdim, sorig = seg.dim, seg.orig_len
+    shape = seg.data.shape
+
+    def build():
+        def body(x):
+            return lax.all_to_all(x, ax, split_axis=new_dim,
+                                  concat_axis=sdim, tiled=True)
+
+        def fn(x):
+            x, _ = _pad_to(x, new_dim, nseg)
+            out = [None] * x.ndim
+            out[new_dim] = _axspec(mesh_axes)
+            sm = compat.shard_map(body, mesh=seg.group.mesh,
+                                  in_specs=seg.pspec, out_specs=P(*out),
+                                  check_vma=False)
+            y = sm(x)
+            if sorig is not None and sorig != shape[sdim]:
+                # old-dim padding sits at the global tail; it is local to
+                # every shard after the transpose — no communication.
+                y = lax.slice_in_dim(y, 0, sorig, axis=sdim)
+            return y
+
+        return jax.jit(fn)
+
+    return _plan(key, build, op="all_to_all", cache=cache,
+                 meta={"schedule": "all_to_all"})
 
 
-def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
+def all_to_all(seg: SegmentedArray, new_dim: int,
+               cache: PlanCache | None = None) -> SegmentedArray:
     """Re-segment from ``seg.dim`` to ``new_dim`` with an all-to-all
     (MPI_Alltoall — the natural extension of the paper's verb set; used
     for MoE dispatch and FFT transposes).
@@ -549,48 +1066,67 @@ def all_to_all(seg: SegmentedArray, new_dim: int) -> SegmentedArray:
                          f"got {seg.policy}")
     if new_dim == seg.dim:
         return seg
-    ax = _axis_arg(seg.mesh_axes)
-    data, new_orig = _pad_to(seg.data, new_dim, seg.nseg)
-
-    def body(x):
-        return lax.all_to_all(x, ax, split_axis=new_dim, concat_axis=seg.dim,
-                              tiled=True)
-
-    out = [None] * data.ndim
-    out[new_dim] = ax
-    data = compat.shard_map(body, mesh=seg.group.mesh,
-                            in_specs=seg.pspec, out_specs=P(*out))(data)
-    if seg.orig_len is not None and seg.orig_len != data.shape[seg.dim]:
-        # old-dim padding sits at the global tail; it is local to every
-        # shard after the transpose, so the slice needs no communication.
-        data = lax.slice_in_dim(data, 0, seg.orig_len, axis=seg.dim)
-    import dataclasses
+    data = plan_all_to_all(seg, new_dim, cache=cache)(seg.data)
     return dataclasses.replace(seg, data=data, dim=new_dim,
-                               orig_len=new_orig)
+                               orig_len=seg.data.shape[new_dim])
 
 
-def reduce_scatter(seg: SegmentedArray, op: str = "sum") -> SegmentedArray:
-    """Reduce the segments and leave the result segmented along dim 0 of
-    the merged array (MPI_Reduce_scatter)."""
-    if op != "sum":
-        raise NotImplementedError("reduce_scatter supports sum")
-    ax = _axis_arg(seg.mesh_axes)
+_REDUCE_SCATTER_OPS = ("sum", "max", "min")
+
+
+def plan_reduce_scatter(seg: SegmentedArray, op: str = "sum",
+                        cache: PlanCache | None = None) -> Plan:
+    """Plan the reduce_scatter: ``sum`` lowers to ``lax.psum_scatter``;
+    ``max``/``min`` run the same schedule explicitly (one tiled
+    all_to_all of the locally-reduced payload + a local elementwise
+    merge — identical bytes on the wire)."""
+    if op not in _REDUCE_SCATTER_OPS:
+        raise ValueError(f"reduce_scatter supports {_REDUCE_SCATTER_OPS}, "
+                         f"got {op!r}")
+    key = ("transfer", "reduce_scatter", seg_token(seg), op)
+    mesh_axes = tuple(seg.mesh_axes)
+    ax = _axis_arg(mesh_axes)
     nseg = seg.nseg
-    merged_len = [d for i, d in enumerate(seg.data.shape) if i != seg.dim][0]
+    sdim = seg.dim
+    merged_len = [d for i, d in enumerate(seg.data.shape) if i != sdim][0]
     padded = math.ceil(merged_len / nseg) * nseg
 
-    def body(x):
-        x = jnp.sum(x, axis=seg.dim)
-        if padded != merged_len:
-            pad = [(0, 0)] * x.ndim
-            pad[0] = (0, padded - merged_len)
-            x = jnp.pad(x, pad)
-        return lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+    def build():
+        jred = _REDUCERS[op][1]
 
-    merged_ndim = seg.data.ndim - 1
-    out = [None] * merged_ndim
-    out[0] = ax
-    data = compat.shard_map(body, mesh=seg.group.mesh,
-                            in_specs=seg.pspec, out_specs=P(*out))(seg.data)
+        def body(x):
+            x = jred(x, axis=sdim)
+            if padded != merged_len:
+                pad = [(0, 0)] * x.ndim
+                pad[0] = (0, padded - merged_len)
+                x = jnp.pad(x, pad)
+            if op == "sum":
+                return lax.psum_scatter(x, ax, scatter_dimension=0,
+                                        tiled=True)
+            t = lax.all_to_all(x, ax, split_axis=0, concat_axis=0,
+                               tiled=True)
+            t = t.reshape(nseg, padded // nseg, *x.shape[1:])
+            return jred(t, axis=0)
+
+        merged_ndim = seg.data.ndim - 1
+        out = [None] * merged_ndim
+        out[0] = _axspec(mesh_axes)
+        sm = compat.shard_map(body, mesh=seg.group.mesh, in_specs=seg.pspec,
+                              out_specs=P(*out), check_vma=False)
+        return jax.jit(sm)
+
+    return _plan(key, build, op="reduce_scatter", cache=cache,
+                 meta={"schedule": ("psum_scatter" if op == "sum"
+                                    else f"alltoall_{op}")})
+
+
+def reduce_scatter(seg: SegmentedArray, op: str = "sum",
+                   cache: PlanCache | None = None) -> SegmentedArray:
+    """Reduce the segments and leave the result segmented along dim 0 of
+    the merged array (MPI_Reduce_scatter).  ``op`` may be ``sum``,
+    ``max`` or ``min``."""
+    merged_len = [d for i, d in enumerate(seg.data.shape)
+                  if i != seg.dim][0]
+    data = plan_reduce_scatter(seg, op, cache=cache)(seg.data)
     return SegmentedArray(data, seg.group, Policy.NATURAL, 0, seg.mesh_axes,
                           orig_len=merged_len)

@@ -179,12 +179,18 @@ class Communicator:
     def bcast(self, x) -> SegmentedArray:
         """Replicate a local array on every device (-> CLONE container).
 
+        Large payloads (>= ``comm.BCAST_SCATTER_MIN_BYTES``) take the
+        scatter+allgather schedule: the host uploads 1/n to each device
+        and a chunked tiled all-gather (ICI submesh first, DCN across)
+        assembles the replicas — instead of the host pushing the full
+        array to every device.
+
         >>> from repro.core import Environment, Policy
         >>> comm = Environment().subgroup(1)
         >>> comm.bcast([1., 2., 3.]).policy
         <Policy.CLONE: 'clone'>
         """
-        return self.container(x, policy=Policy.CLONE)
+        return _comm.broadcast(x, self.group, mesh_axes=self.mesh_axes)
 
     def scatter(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
                 block: int | None = None, halo: int = 0) -> SegmentedArray:

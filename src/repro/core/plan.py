@@ -1,0 +1,193 @@
+"""Plan / PlanCache — the library-port substrate (paper §4).
+
+MGPU ports existing GPU libraries (CUFFT -> libfft, CUBLAS -> libblas)
+by pairing every operation with a *plan*: a descriptor object that
+captures the problem geometry (shape, dtype, batch, distribution) and
+the device group, built once and executed many times.  cudaLibMg's
+grid/matrix descriptors and stdgpu's "construct once, use everywhere"
+containers follow the same shape.  For a real-time frame loop this is
+the difference between per-frame re-setup (trace + lower + compile on
+the hot path) and a steady state where every frame is a cache hit.
+
+``Plan``       an executable bound to one immutable key (geometry +
+               group); calling it runs the compiled program.
+``PlanCache``  an LRU-bounded key -> Plan map with hit/miss/eviction
+               counters.  Keys include the communicator group identity
+               (device ids + mesh axes), so plans never leak across
+               groups.  ``stats()`` is what the streaming engine and
+               benchmark reports surface.
+
+Every ported library (``repro.lib.fft`` / ``.blas`` / ``.gridding``)
+builds its plans through the shared default cache unless handed a
+private one — and so do the eager transfer verbs in ``repro.core.comm``
+(their shard_map programs are plans keyed on layout + schedule + size
+threshold), which is why the machinery lives in ``repro.core``: the verb
+layer must not import ``repro.lib``.  ``repro.lib.plan`` re-exports this
+module unchanged for the historical import path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Callable
+
+
+def group_token(group_or_comm) -> tuple:
+    """Hashable identity of a device group (or Communicator).
+
+    Two communicators share plans iff they address the same devices
+    arranged as the same named-axis mesh — the plan-cache analogue of
+    MGPU plans being bound to the ``dev_group`` they were created on.
+    """
+    if group_or_comm is None:
+        return ("nogroup",)
+    g = getattr(group_or_comm, "group", group_or_comm)
+    mesh = g.mesh
+    axes = getattr(group_or_comm, "mesh_axes", None) or tuple(mesh.axis_names)
+    return (tuple(int(d.id) for d in mesh.devices.flat),
+            tuple(mesh.devices.shape), tuple(mesh.axis_names), tuple(axes))
+
+
+def seg_token(seg) -> tuple:
+    """Hashable layout identity of a SegmentedArray (shape, dtype and the
+    full segmentation policy — what an MGPU descriptor records)."""
+    return (tuple(seg.data.shape), str(seg.data.dtype), seg.policy.value,
+            seg.dim, seg.orig_len, seg.block, seg.halo,
+            group_token(seg))
+
+
+@dataclasses.dataclass
+class Plan:
+    """One built library plan: an executable bound to an immutable key.
+
+    ``fn`` is the compiled/compilable program (typically a ``jax.jit``
+    wrapper or a verb-layer composite); ``meta`` carries whatever the
+    builder wants reports to see (interp matrices' nnz, transfer bytes,
+    schedule choice, ...).
+    """
+
+    key: tuple
+    fn: Callable
+    lib: str = ""
+    op: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __call__(self, *args, **kw):
+        return self.fn(*args, **kw)
+
+    def __repr__(self) -> str:
+        return f"Plan({self.lib}.{self.op}, key_hash={hash(self.key):#x})"
+
+
+class PlanCache:
+    """LRU-bounded plan store with hit/miss/eviction counters.
+
+    Keys are full plan keys (op + geometry + group token); a lookup that
+    misses runs ``builder()`` once and caches the result.  Counters are
+    cumulative; ``snapshot()``/``stats()`` expose them so callers (the
+    streaming engine, benchmark rows) can report hit rates and prove the
+    steady state builds nothing.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        if maxsize < 1:
+            raise ValueError("PlanCache needs maxsize >= 1")
+        self.maxsize = maxsize
+        self._plans: OrderedDict[tuple, Plan] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._plans
+
+    def get_or_build(self, key: tuple, builder: Callable[[], Plan]) -> Plan:
+        """Return the cached plan for ``key``, building (and possibly
+        evicting the least-recently-used plan) on a miss."""
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan
+            self.misses += 1
+        # build outside the lock: builders may trace/compile for a while
+        plan = builder()
+        if not isinstance(plan, Plan):
+            plan = Plan(key=key, fn=plan)
+        with self._lock:
+            existing = self._plans.get(key)
+            if existing is not None:
+                # another thread built the same key meanwhile: keep the
+                # first build so every caller shares one plan object.
+                self._plans.move_to_end(key)
+                return existing
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+        return plan
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+
+    # -- reporting --------------------------------------------------------
+    @property
+    def builds(self) -> int:
+        """Total plans built (== misses: every miss builds exactly once)."""
+        return self.misses
+
+    def snapshot(self) -> dict:
+        """Point-in-time counters, cheap enough to take per frame."""
+        return {"hits": self.hits, "misses": self.misses,
+                "builds": self.builds, "evictions": self.evictions,
+                "size": len(self._plans)}
+
+    def delta(self, since: dict) -> dict:
+        """Counter movement since a ``snapshot()`` — what one measured
+        region (a streamed frame, a benchmark's steady state) did to the
+        cache.  This is the harness-facing counter surface: the
+        streaming engine and ``repro.bench.harness.measure`` both report
+        it per region, so 'the steady state builds nothing' is a
+        checkable number (``builds == 0``) rather than a belief."""
+        now = self.snapshot()
+        d = {k: now[k] - since[k]
+             for k in ("hits", "misses", "builds", "evictions")}
+        total = d["hits"] + d["misses"]
+        d["hit_rate"] = round(d["hits"] / total, 4) if total else 0.0
+        return d
+
+    def stats(self) -> dict:
+        """Counters + derived hit rate, for report artifacts."""
+        s = self.snapshot()
+        total = s["hits"] + s["misses"]
+        s["capacity"] = self.maxsize
+        s["hit_rate"] = round(s["hits"] / total, 4) if total else 0.0
+        return s
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (f"PlanCache(size={s['size']}/{s['capacity']}, "
+                f"hits={s['hits']}, builds={s['builds']}, "
+                f"hit_rate={s['hit_rate']})")
+
+
+_DEFAULT = PlanCache(maxsize=256)
+
+
+def default_cache() -> PlanCache:
+    """The shared cache all ported libraries use unless given their own."""
+    return _DEFAULT
+
+
+def plan_stats() -> dict:
+    """Stats of the shared default cache (report-artifact convenience)."""
+    return _DEFAULT.stats()

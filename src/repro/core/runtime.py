@@ -92,6 +92,21 @@ class DeviceGroup:
     def dcn_axes(self) -> tuple[str, ...]:
         return tuple(a for a in self.axis_names if a in DCN_AXES)
 
+    @property
+    def platform(self) -> str:
+        return self.mesh.devices.flat[0].platform
+
+    @property
+    def unified_memory(self) -> bool:
+        """True when the group's devices share one memory domain (the
+        host-simulated CPU mesh): a host->device upload or replicated
+        ``device_put`` is then a local copy, so bandwidth-splitting
+        schedules (scatter+allgather broadcast, psum_scatter+all_gather
+        reduce) only add collective rounds.  The transfer layer picks
+        direct schedules here and the decomposed ones on discrete-memory
+        accelerator platforms."""
+        return self.platform == "cpu"
+
     def axis_size(self, *axes: str) -> int:
         return math.prod(self.mesh.shape[a] for a in axes)
 

@@ -341,6 +341,17 @@ def _pad_to(x: jax.Array, dim: int, mult: int) -> tuple[jax.Array, int]:
     return jnp.pad(x, pad), n
 
 
+def _pad_to_np(x: np.ndarray, dim: int, mult: int) -> tuple[np.ndarray, int]:
+    """numpy twin of ``_pad_to`` for the host-side segment() prologue."""
+    n = x.shape[dim]
+    target = math.ceil(n / mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[dim] = (0, target - n)
+    return np.pad(x, pad), n
+
+
 def _block_cyclic_perm(n: int, nseg: int, block: int) -> np.ndarray:
     """Permutation mapping logical index -> segment-major block-cyclic order."""
     nblocks = n // block
@@ -361,8 +372,20 @@ def segment(x, group: DeviceGroup | None = None, *,
     the paper's container constructor.
     """
     group = current_group(group)
-    x = jnp.asarray(x)
     nseg = group.axis_size(*mesh_axes)
+    # Host inputs (lists, numpy arrays) stay in numpy through the
+    # pad/permute prologue so the single ``device_put`` at the end
+    # uploads each shard straight to its owner — no staging hop through
+    # device 0 of a committed full-array copy.  jax arrays and tracers
+    # keep the jnp path (they may already live on-device or be abstract).
+    on_host = not isinstance(x, (jax.Array, jax.core.Tracer))
+    if on_host:
+        x = np.asarray(x)
+        x = x.astype(jax.dtypes.canonicalize_dtype(x.dtype), copy=False)
+        xp, pad_to = np, _pad_to_np
+    else:
+        x = jnp.asarray(x)
+        xp, pad_to = jnp, _pad_to
 
     if policy is Policy.CLONE:
         data = jax.device_put(x, group.sharding(P()))
@@ -372,13 +395,13 @@ def segment(x, group: DeviceGroup | None = None, *,
     if policy is Policy.BLOCK:
         if block is None:
             raise ValueError("BLOCK policy requires block=")
-        x, orig = _pad_to(x, dim, nseg * block)
+        x, orig = pad_to(x, dim, nseg * block)
         perm = _block_cyclic_perm(x.shape[dim], nseg, block)
-        x = jnp.take(x, jnp.asarray(perm), axis=dim)
+        x = xp.take(x, perm if on_host else jnp.asarray(perm), axis=dim)
         seg = SegmentedArray(x, group, policy, dim, mesh_axes,
                              orig_len=orig, block=block)
     elif policy in (Policy.NATURAL, Policy.OVERLAP2D):
-        x, orig = _pad_to(x, dim, nseg)
+        x, orig = pad_to(x, dim, nseg)
         seg = SegmentedArray(x, group, policy, dim, mesh_axes,
                              orig_len=orig, halo=halo)
     else:

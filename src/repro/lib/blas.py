@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..core import comm as _comm
 from ..core import compat
 from ..core.comm import _axis_arg
 from ..core.segmented import Policy, SegmentedArray
@@ -260,22 +261,49 @@ def gemm_batched(a: SegmentedArray, b: SegmentedArray,
     return a.with_data(plan(a.data, b.data))
 
 
+def gemm_ksplit_schedule(a: SegmentedArray, b: SegmentedArray) -> str:
+    """The reduction schedule ``gemm_ksplit`` picks for these operands:
+    ``rs_ag`` (psum_scatter + all_gather, Rabenseifner-style — each
+    device reduces 1/n of the product and the replicas are assembled by
+    an all-gather, halving the bytes each link carries vs a plain psum)
+    above ``comm.REDUCE_RS_AG_MIN_BYTES``, else ``psum``."""
+    nseg = a.nseg
+    out_rows = a.data.shape[0]
+    nbytes = (out_rows * b.data.shape[1]
+              * jnp.promote_types(a.dtype, b.dtype).itemsize)
+    eligible = nseg > 1 and out_rows % nseg == 0
+    if _comm.REDUCE_SCHEDULE is not None:
+        return ("rs_ag" if _comm.REDUCE_SCHEDULE == "rs_ag" and eligible
+                else "psum")
+    if (eligible and not a.group.unified_memory
+            and nbytes >= _comm.REDUCE_RS_AG_MIN_BYTES):
+        return "rs_ag"
+    return "psum"
+
+
 def gemm_ksplit(a: SegmentedArray, b: SegmentedArray,
                 cache: PlanCache | None = None) -> SegmentedArray:
     """A·B with the contraction dim segmented: local partial matmul +
     one inter-device reduction (the paper's non-scaling A·B case; on TPU
-    the classic tensor-parallel matmul)."""
+    the classic tensor-parallel matmul).  Large products decompose the
+    reduction Rabenseifner-style — see :func:`gemm_ksplit_schedule`."""
+    schedule = gemm_ksplit_schedule(a, b)
+
     def build():
         ax = _axis_arg(a.mesh_axes)
 
         def body(al, bl):
-            return lax.psum(al @ bl, ax)
+            part = al @ bl
+            if schedule == "rs_ag":
+                return _comm._psum_rs_ag(part, tuple(a.mesh_axes))
+            return lax.psum(part, ax)
 
         sm = compat.shard_map(body, mesh=a.group.mesh,
                               in_specs=(P(None, ax), P(ax, None)),
-                              out_specs=P())
+                              out_specs=P(), check_vma=False)
         return jax.jit(sm)
 
-    plan = _binary_plan("gemm_ksplit", a, b, build, cache)
+    plan = _binary_plan("gemm_ksplit", a, b, build, cache,
+                        extra=(schedule,))
     out = plan(a.data, b.data)
     return SegmentedArray(out, a.group, Policy.CLONE, 0, a.mesh_axes)

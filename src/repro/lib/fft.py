@@ -28,7 +28,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
 
+from ..core import compat
 from ..core.segmented import Policy, SegmentedArray
 from .plan import Plan, PlanCache, default_cache, seg_token
 
@@ -106,10 +109,11 @@ def plan_fft2_batched(seg: SegmentedArray, *, inverse: bool = False,
            bool(inverse), bool(centered))
 
     def build():
-        return Plan(key=key, fn=_build_fft2_batched(seg, inverse, centered),
+        fn, sched = _build_fft2_batched(seg, inverse, centered)
+        return Plan(key=key, fn=fn,
                     lib="fft", op="fft2_batched",
                     meta={"policy": seg.policy.value, "dim": seg.dim,
-                          "distributed": _dim_in_plane(seg)})
+                          "distributed": _dim_in_plane(seg), **sched})
 
     return cache.get_or_build(key, build)
 
@@ -120,15 +124,63 @@ def _dim_in_plane(seg: SegmentedArray) -> bool:
     return seg.policy is not Policy.CLONE and seg.dim in (nd - 2, nd - 1)
 
 
+FFT_TRANSPOSE_CHUNKS = 4
+"""Chunk count target for the fused distributed transpose: the batch dim
+is split into up-to-this-many independent fft -> all_to_all -> fft
+chains inside ONE program so the scheduler can run chunk ``i+1``'s local
+FFT behind chunk ``i``'s transpose collective (the PR 5 compute-overlap
+ring, extended from allreduce to the FFT transpose)."""
+
+
+def _build_fft2_fused(seg: SegmentedArray, inverse: bool, centered: bool,
+                      seg_ax: int, other_ax: int):
+    """One jitted shard_map for the in-plane distributed FFT: local FFT of
+    the complete axis, tiled all_to_all transpose, FFT of the (now
+    complete) formerly-split axis, transpose back — chunked along a batch
+    dim so per-chunk compute pipelines behind per-chunk communication."""
+    mesh_axes = tuple(seg.mesh_axes)
+    ax = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+    nd = seg.data.ndim
+    batch_ax = next((i for i in range(nd)
+                     if i not in (seg_ax, other_ax) and seg.data.shape[i] > 1),
+                    None)
+    chunks = (1 if batch_ax is None else
+              next(c for c in (FFT_TRANSPOSE_CHUNKS, 2, 1)
+                   if seg.data.shape[batch_ax] % c == 0))
+
+    def chain(c):
+        c = _fft1_local(c, other_ax, inverse, centered)
+        c = lax.all_to_all(c, ax, split_axis=other_ax, concat_axis=seg_ax,
+                           tiled=True)
+        c = _fft1_local(c, seg_ax, inverse, centered)
+        return lax.all_to_all(c, ax, split_axis=seg_ax, concat_axis=other_ax,
+                              tiled=True)
+
+    def body(x):
+        if chunks == 1:
+            return chain(x)
+        parts = jnp.split(x, chunks, axis=batch_ax)
+        return jnp.concatenate([chain(p) for p in parts], axis=batch_ax)
+
+    spec = [None] * nd
+    spec[seg_ax] = ax
+    sm = compat.shard_map(body, mesh=seg.group.mesh, in_specs=P(*spec),
+                          out_specs=P(*spec), check_vma=False)
+    arr_fn = jax.jit(sm)
+    return (lambda s: s.with_data(arr_fn(s.data))), chunks
+
+
 def _build_fft2_batched(seg: SegmentedArray, inverse: bool, centered: bool):
+    """Build the executor for one container geometry.  Returns
+    ``(fn, meta)`` where meta records the schedule picked."""
     local = functools.partial(_fft2_local, inverse=inverse, centered=centered)
     if not _dim_in_plane(seg):
         # batch segmented (or CLONE): shard-local batched FFT, no comm.
         if seg.policy is Policy.CLONE:
-            return lambda s: s.with_data(local(s.data))
-        return lambda s: s.invoke(local)
+            return (lambda s: s.with_data(local(s.data))), {"schedule": "local"}
+        return (lambda s: s.invoke(local)), {"schedule": "local"}
 
-    # transform plane segmented: transpose algorithm over the verbs.
+    # transform plane segmented: transpose algorithm.
     nd = seg.data.ndim
     row_ax, col_ax = nd - 2, nd - 1
     seg_ax = seg.dim
@@ -138,6 +190,24 @@ def _build_fft2_batched(seg: SegmentedArray, inverse: bool, centered: bool):
             "distributed in-plane FFT needs the segmented dim unpadded "
             f"(orig_len={seg.orig_len} != {seg.data.shape[seg_ax]}); pick a "
             "length divisible by the group size")
+
+    if seg.data.shape[other_ax] % seg.nseg == 0:
+        # both transform axes tile over the group: fuse the whole
+        # transpose algorithm (OVERLAP2D included — its stored layout is
+        # the NATURAL row split, so the same program applies and the
+        # container metadata rides through unchanged).
+        fn, chunks = _build_fft2_fused(seg, inverse, centered,
+                                       seg_ax, other_ax)
+        return fn, {"schedule": "fused_transpose", "chunks": chunks}
+
+    return (_build_fft2_verbs(seg, inverse, centered, seg_ax, other_ax),
+            {"schedule": "verbs"})
+
+
+def _build_fft2_verbs(seg: SegmentedArray, inverse: bool, centered: bool,
+                      seg_ax: int, other_ax: int):
+    """Eager-verb transpose fallback for geometries whose complete axis
+    does not tile over the group (all_to_all pads/slices per round)."""
 
     def fn(s: SegmentedArray) -> SegmentedArray:
         src_policy, src_halo = s.policy, s.halo

@@ -1,0 +1,204 @@
+"""Naive-parity suite for the ISSUE 6 transfer schedules.
+
+Every new schedule — scatter+allgather broadcast, the direct-collective
+``copy`` routes, the rs+ag reduce decomposition, the fused chunked FFT
+transpose — must produce bitwise (or 1e-5) identical results to the
+naive verb / numpy reference on 1, 2 and 4 devices.  Schedules that the
+topology-aware auto would not pick on the host-simulated CPU mesh are
+forced through ``comm.BCAST_SCHEDULE`` / ``comm.REDUCE_SCHEDULE`` so
+both sides of every decision run everywhere.
+"""
+
+import pytest
+
+from helpers import run_with_devices
+
+PARITY = """
+import repro.core.comm as C
+import repro.lib.blas as B
+import repro.lib.fft as F
+from repro.core.plan import default_cache
+from repro.core.runtime import DeviceGroup
+from repro.core.segmented import Policy, segment, gather
+
+g = DeviceGroup.all_devices()
+n = g.ndev
+rng = np.random.default_rng(0)
+
+# --- broadcast: both schedules == the input, any device count ----------
+x = (rng.standard_normal((64, 65))
+     + 1j * rng.standard_normal((64, 65))).astype(np.complex64)
+for sched in ("device_put", "scatter_allgather"):
+    C.BCAST_SCHEDULE = sched
+    s = C.broadcast(x, g)
+    check(f"bcast {sched} policy", s.policy is Policy.CLONE)
+    check(f"bcast {sched} parity",
+          np.array_equal(np.asarray(gather(s)), x))
+C.BCAST_SCHEDULE = None
+
+# --- copy: every direct route == the rebuild fallback ------------------
+def parity(src, route, **kw):
+    got = C.copy_route(src, **kw)
+    check(f"route {route} n={n}", got == route)
+    out = C.copy(src, **kw)
+    ref = segment(gather(src), src.group, mesh_axes=src.mesh_axes,
+                  policy=kw.get("policy", src.policy) or src.policy,
+                  dim=kw.get("dim", src.dim),
+                  block=kw.get("block"), halo=kw.get("halo") or 0)
+    check(f"copy {route} values",
+          np.array_equal(np.asarray(gather(out)), np.asarray(gather(ref))))
+    check(f"copy {route} meta",
+          (out.policy, out.dim) == (ref.policy, ref.dim)
+          and out.block == ref.block)
+    return out
+
+xs = rng.standard_normal((64, 5)).astype(np.float32)
+nat = segment(xs, g)                       # 64 % n == 0: unpadded
+cl = parity(nat, "replicate", policy=Policy.CLONE)
+parity(cl, "clone_split", policy=Policy.NATURAL)
+parity(cl, "clone_split", policy=Policy.BLOCK, block=2)
+parity(nat, "alltoall", dim=1)             # dim 1 len 5: pads per rank
+parity(nat, "block_pack", policy=Policy.BLOCK, block=2)
+blk = segment(xs, g, policy=Policy.BLOCK, block=2)
+parity(blk, "block_unpack", policy=Policy.NATURAL)
+
+xp = rng.standard_normal((13, 8)).astype(np.float32)   # padded NATURAL
+natp = segment(xp, g)
+clp = parity(natp, "replicate", policy=Policy.CLONE)
+check("replicate keeps orig_len", clp.orig_len == natp.orig_len)
+parity(clp, "clone_split", policy=Policy.NATURAL)
+parity(natp, "alltoall", dim=1)
+if n > 1:
+    # 12 rows, block=2: blocks-per-rank not a multiple of n at n in (2, 4)
+    xu = rng.standard_normal((12, 3)).astype(np.float32)
+    natu = segment(xu, g)
+    check("unaligned BLOCK -> rebuild",
+          C.copy_route(natu, policy=Policy.BLOCK, block=2) == "rebuild")
+    blku = C.copy(natu, policy=Policy.BLOCK, block=2)
+    check("rebuild values", np.array_equal(np.asarray(gather(blku)), xu))
+
+# halo-only OVERLAP2D change: metadata only, zero bytes moved
+xo = rng.standard_normal((16, 16)).astype(np.float32)
+ov = segment(xo, g, policy=Policy.OVERLAP2D, halo=1)
+check("halo-only route", C.copy_route(ov, halo=3) == "meta")
+ov2 = C.copy(ov, halo=3)
+check("halo-only is metadata", ov2.data is ov.data and ov2.halo == 3)
+check("same-layout copy moves nothing",
+      C.copy_route(ov) == "meta" and C.copy(ov).data is ov.data)
+check("clone alias", C.copy_route(cl) == "alias"
+      and C.copy(cl).data is cl.data)
+
+# --- reduce / allreduce: rs_ag == psum == numpy ------------------------
+xr = rng.standard_normal((4, 32, 32)).astype(np.float32)
+sr = segment(xr, g)
+got = {}
+for sched in ("psum", "rs_ag"):
+    C.REDUCE_SCHEDULE = sched
+    got[sched] = np.asarray(C.reduce(sr))
+    check(f"reduce {sched} vs numpy",
+          np.allclose(got[sched], xr.sum(0), atol=1e-5))
+    ar = np.asarray(gather(C.all_reduce(sr)))
+    check(f"allreduce {sched} vs numpy", np.allclose(ar, xr.sum(0), atol=1e-5))
+C.REDUCE_SCHEDULE = None
+check("reduce schedules agree", np.allclose(got["psum"], got["rs_ag"],
+                                            atol=1e-6))
+
+# --- reduce_scatter: sum/max/min == numpy ------------------------------
+for op, ref in (("sum", xr.sum(0)), ("max", xr.max(0)), ("min", xr.min(0))):
+    rs = C.reduce_scatter(sr, op=op)
+    check(f"reduce_scatter {op} policy", rs.policy is Policy.NATURAL)
+    check(f"reduce_scatter {op} vs numpy",
+          np.allclose(np.asarray(gather(rs)), ref, atol=1e-5))
+
+# --- gemm_ksplit: rs_ag == psum == numpy -------------------------------
+A = rng.standard_normal((32, 32)).astype(np.float32)
+Bm = rng.standard_normal((32, 32)).astype(np.float32)
+sA = segment(A, g, dim=1)
+sB = segment(Bm, g, dim=0)
+for sched in ("psum", "rs_ag"):
+    C.REDUCE_SCHEDULE = sched
+    check(f"gemm schedule {sched}",
+          B.gemm_ksplit_schedule(sA, sB) == (sched if n > 1 else "psum"))
+    out = np.asarray(B.gemm_ksplit(sA, sB).data)
+    check(f"gemm {sched} vs numpy", np.allclose(out, A @ Bm, atol=1e-3))
+C.REDUCE_SCHEDULE = None
+
+# --- FFT: fused transpose == numpy fft2, verbs fallback too ------------
+xf = (rng.standard_normal((4, 16, 16))
+      + 1j * rng.standard_normal((4, 16, 16))).astype(np.complex64)
+ref2 = np.fft.fft2(xf, axes=(-2, -1), norm="ortho")
+for dim in (1, 2):
+    sf = segment(xf, g, dim=dim)
+    plan = F.plan_fft2_batched(sf)
+    check(f"fft dim={dim} fused",
+          plan.meta["schedule"] == "fused_transpose")
+    out = plan(sf)
+    check(f"fft dim={dim} layout",
+          out.policy is sf.policy and out.dim == sf.dim)
+    check(f"fft dim={dim} parity",
+          np.allclose(np.asarray(gather(out)), ref2, atol=1e-5))
+
+so = segment(xf, g, dim=1, policy=Policy.OVERLAP2D, halo=1)
+plano = F.plan_fft2_batched(so)
+outo = plano(so)
+check("fft overlap2d layout",
+      outo.policy is Policy.OVERLAP2D and outo.halo == 1)
+check("fft overlap2d parity",
+      np.allclose(np.asarray(gather(outo)), ref2, atol=1e-5))
+
+xv = (rng.standard_normal((2, 16, 6))
+      + 1j * rng.standard_normal((2, 16, 6))).astype(np.complex64)
+sv = segment(xv, g, dim=1)
+planv = F.plan_fft2_batched(sv)
+check("fft fallback schedule",
+      planv.meta["schedule"] == ("verbs" if 6 % n else "fused_transpose"))
+check("fft fallback parity",
+      np.allclose(np.asarray(gather(planv(sv))),
+                  np.fft.fft2(xv, axes=(-2, -1), norm="ortho"), atol=1e-5))
+
+# --- steady state: a second round of every verb builds nothing ---------
+before = default_cache().snapshot()
+C.broadcast(x, g)
+C.copy(nat, policy=Policy.CLONE)
+C.reduce(sr)
+C.reduce_scatter(sr)
+F.plan_fft2_batched(segment(xf, g, dim=1))
+d = default_cache().delta(before)
+check("steady state builds nothing", d["builds"] == 0 and d["hits"] > 0)
+print("PARITY-OK")
+"""
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 4])
+def test_transfer_schedule_parity(ndev):
+    out = run_with_devices(PARITY, ndev=ndev)
+    assert "PARITY-OK" in out
+
+
+def test_reduce_scatter_rejects_unknown_op():
+    import numpy as np
+
+    from repro.core import comm
+    from repro.core.runtime import DeviceGroup
+    from repro.core.segmented import segment
+
+    g = DeviceGroup.all_devices()
+    seg = segment(np.ones((2, 4, 4), dtype=np.float32), g)
+    with pytest.raises(ValueError,
+                       match=r"reduce_scatter supports .*'sum', 'max', "
+                             r"'min'.*got 'prod'"):
+        comm.reduce_scatter(seg, op="prod")
+
+
+def test_copy_validates_layout_kwargs():
+    import numpy as np
+
+    from repro.core import comm
+    from repro.core.segmented import Policy, segment
+
+    seg = segment(np.ones((4, 4), dtype=np.float32))
+    with pytest.raises(ValueError, match="copy to BLOCK requires block="):
+        comm.copy(seg, policy=Policy.BLOCK)
+    with pytest.raises(ValueError,
+                       match="halo= is only meaningful for OVERLAP2D"):
+        comm.copy(seg, policy=Policy.NATURAL, halo=2)
