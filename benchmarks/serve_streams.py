@@ -1,0 +1,13 @@
+"""The multi-stream reconstruction service: scheduler throughput,
+per-client p95 SLO, and the batched-vs-sequential A/B — thin CLI over
+``repro.bench.suites.serve``.
+
+  PYTHONPATH=src python -m benchmarks.serve_streams [--size ...] [--devices ...]
+"""
+
+from repro.bench.cli import figure_main
+
+main = figure_main("serve")
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -73,7 +73,7 @@ run_bench() {
     # paper-size fig5 rides along so the transfer schedules are gated at
     # a payload size where the schedule choice (scatter+allgather bcast,
     # rs+ag reduce) actually matters, not only at tiny-CI sizes.
-    sweep="--sweep tiny:fig4,fig5,fig6,fig89,gridding,stream,table1 --sweep paper:fig5"
+    sweep="--sweep tiny:fig4,fig5,fig6,fig89,gridding,serve,stream,table1 --sweep paper:fig5"
     base=""
     if [ -f BENCH_paper.json ]; then
         base="$(mktemp)"

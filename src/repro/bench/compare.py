@@ -18,6 +18,11 @@ still fail once the new cost clears threshold above the floor itself,
 so a sub-floor baseline never exempts a real regression.  New scenarios
 pass (the trajectory is supposed to grow); scenarios that disappeared
 are reported and fail only under ``--fail-on-missing``.
+
+Serve scenarios additionally gate the worst per-client p95
+(``extra.client_p95_ms``) with the same threshold/floor/scale rules: a
+scheduler change that keeps the mean tick fast while starving one
+client is a regression too.
 """
 
 from __future__ import annotations
@@ -48,10 +53,15 @@ class Comparison:
     # drops anywhere as the device count grows (advisory: reported, not
     # gated — the fig. 5 scaling-shape check)
     non_monotone: list = dataclasses.field(default_factory=list)
+    # serving SLO gate: scenarios whose per-client p95
+    # (``extra.client_p95_ms``, worst client) regressed past the same
+    # threshold — a scheduler change that keeps the mean tick fast but
+    # starves one client fails here, not silently
+    p95_regressions: list = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
-        return not self.regressions
+        return not (self.regressions or self.p95_regressions)
 
 
 def compare_artifacts(base: dict, new: dict, *,
@@ -91,6 +101,17 @@ def compare_artifacts(base: dict, new: dict, *,
             cmp.improvements.append(entry)
         else:
             cmp.unchanged.append(entry)
+        # per-client SLO column (serve scenarios): same threshold/floor
+        # discipline, on the worst client's p95 instead of the mean tick
+        bp = (b[key].get("extra") or {}).get("client_p95_ms")
+        np_ = (n[key].get("extra") or {}).get("client_p95_ms")
+        if bp is not None and np_ is not None:
+            np_ = round(np_ * scale, 6)
+            if not (bp < min_ms and np_ < min_ms) and \
+                    np_ > max(bp, min_ms) * (1.0 + threshold_pct / 100.0):
+                cmp.p95_regressions.append(
+                    {"key": key, "base_ms": bp, "new_ms": np_,
+                     "ratio": round(np_ / bp, 3) if bp > 0 else None})
     cmp.non_monotone = _non_monotone_speedups(new)
     return cmp
 
@@ -128,6 +149,10 @@ def format_report(cmp: Comparison) -> str:
         lines.append(f"  REGRESSION {entry['key']}: "
                      f"{entry['base_ms']:g} -> {entry['new_ms']:g} ms "
                      f"({entry['ratio']}x)")
+    for entry in cmp.p95_regressions:
+        lines.append(f"  P95 REGRESSION {entry['key']}: worst-client p95 "
+                     f"{entry['base_ms']:g} -> {entry['new_ms']:g} ms "
+                     f"({entry['ratio']}x)")
     for entry in cmp.improvements:
         lines.append(f"  improved   {entry['key']}: "
                      f"{entry['base_ms']:g} -> {entry['new_ms']:g} ms "
@@ -146,7 +171,8 @@ def format_report(cmp: Comparison) -> str:
         f"{len(cmp.improvements)} improved, {len(cmp.new)} new, "
         f"{len(cmp.missing)} missing, "
         f"{len(cmp.non_monotone)} non-monotone scaling, "
-        f"{len(cmp.regressions)} regressions")
+        f"{len(cmp.regressions)} regressions, "
+        f"{len(cmp.p95_regressions)} per-client p95 regressions")
     return "\n".join(lines)
 
 
@@ -177,6 +203,12 @@ def format_markdown(cmp: Comparison) -> str:
         lines.append(f"| `{key}` | — | — | — | 🆕 new |")
     for key in cmp.missing:
         lines.append(f"| `{key}` | — | — | — | ⚠️ missing |")
+    if cmp.p95_regressions:
+        lines += ["", "**Per-client p95 regressions** (serve scenarios, "
+                      "worst client):", ""]
+        for entry in cmp.p95_regressions:
+            lines.append(f"- `{entry['key']}`: {entry['base_ms']:g} → "
+                         f"{entry['new_ms']:g} ms ({entry['ratio']}x)")
     if cmp.non_monotone:
         lines += ["", "**Non-monotone `speedup_vs_1dev`** (scaling drops "
                       "somewhere as devices grow):", ""]

@@ -35,8 +35,8 @@ REPO = pathlib.Path(__file__).resolve().parents[3]
 DEFAULT_OUT_DIR = REPO / "benchmarks" / "out"
 # lm (per-architecture LM steps) is opt-in: it is paper-size only and far
 # heavier than the paper-figure scenarios the CI trajectory tracks.
-DEFAULT_FIGURES = ("fig4", "fig5", "fig6", "fig89", "gridding", "stream",
-                   "table1")
+DEFAULT_FIGURES = ("fig4", "fig5", "fig6", "fig89", "gridding", "serve",
+                   "stream", "table1")
 
 
 def _parse_args(argv):

@@ -4,5 +4,5 @@ Importing this package registers everything with
 ``repro.bench.registry`` (which is why it is not named ``scenarios``:
 the subpackage attribute would shadow ``repro.bench.scenarios()``)."""
 
-from . import (fig4, fig5, fig6, fig89, gridding, lm, stream,  # noqa: F401
-               table1)
+from . import (fig4, fig5, fig6, fig89, gridding, lm, serve,  # noqa: F401
+               stream, table1)

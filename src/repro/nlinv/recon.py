@@ -38,6 +38,12 @@ from .operators import make_ops, sobolev_weight, uinit
 # Segmentation of the unknown pytree u = {rho, chat} (paper §3.2).
 U_POLICIES = {"rho": Policy.CLONE, "chat": Policy.NATURAL}
 
+# The same decomposition with a leading client-batch dim stacked on: the
+# serving layer solves B independent frames in ONE launch, so the coil
+# split moves to dim 1 of y/chat while rho/mask stay replicated with
+# their batch dim intact.
+U_POLICIES_BATCHED = {"rho": Policy.CLONE, "chat": (Policy.NATURAL, 1)}
+
 
 def _as_communicator(comm, axis: str) -> Communicator:
     """Normalize comm=None | DeviceGroup | Communicator to a Communicator.
@@ -148,6 +154,38 @@ class Reconstructor:
                               check_vma=False,
                               donate_argnums=(4, 5) if donate else ())
 
+    # -- the batched frame program (serving layer: B clients, one launch) -
+    def _frame_batched(self, y, mask, fov, weight, x0, x_ref):
+        """B independent frame solves in one SPMD program: vmap the
+        shard-local body over a leading client-batch dim.  All verbs in
+        ``_frame`` (windowed channel sum, piggybacked scalars, vdot) are
+        vmap-safe, so the collectives of B solves coalesce into one
+        rendezvous each — the amortization the multi-stream service is
+        built on."""
+        return jax.vmap(self._frame, in_axes=(0, 0, None, None, 0, 0))(
+            y, mask, fov, weight, x0, x_ref)
+
+    def _build_batched(self, donate: bool):
+        clone = Policy.CLONE
+        in_pol = ((Policy.NATURAL, 1), clone, clone, clone,
+                  U_POLICIES_BATCHED, U_POLICIES_BATCHED)
+        return self.comm.spmd(self._frame_batched,
+                              in_policies=in_pol,
+                              out_policies=(U_POLICIES_BATCHED, clone),
+                              check_vma=False,
+                              donate_argnums=(4, 5) if donate else ())
+
+    def _plan_batched(self, width: int, donate: bool):
+        """Batched plans key on the batch WIDTH: the scheduler buckets
+        widths to a small set, and every bucket's compile shows up as
+        one visible plan build (never a silent recompile)."""
+        key = ("nlinv", "frame_batched", group_token(self.comm), int(width),
+               self.newton, self.cg_iters, self.channel_sum,
+               self.hierarchical, self.fused, self.overlap, bool(donate))
+        return self.plan_cache.get_or_build(
+            key, lambda: Plan(key=key, fn=self._build_batched(donate),
+                              lib="nlinv", op="frame_batched"))
+
     def _plan(self, donate: bool):
         """The frame program as a library plan: keyed on the solver
         configuration + group so the streaming engine's steady state is
@@ -166,6 +204,12 @@ class Reconstructor:
     @property
     def fn_donate_carry(self):
         return self._plan(donate=True).fn
+
+    def fn_batched(self, width: int, *, donate: bool = False):
+        """The B-client frame program for batch width ``width``:
+        ``(y (B,J,X,Y), mask (B,X,Y), fov, weight, u (B,...), x_ref
+        (B,...)) -> (u, images (B,X,Y))``.  Plan-cached per width."""
+        return self._plan_batched(width, donate).fn
 
     def __call__(self, y, mask, fov, weight, x0, x_ref):
         return self.fn(y, mask, fov, weight, x0, x_ref)

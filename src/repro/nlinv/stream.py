@@ -44,13 +44,65 @@ def latency_stats(samples_ms) -> dict:
     if arr.size == 0:
         arr = np.zeros(1)
     mean = float(arr.mean())
+    if arr.size < 2:
+        # a single-sample window has no spread: the percentiles ARE the
+        # sample and the jitter is exactly zero — never interpolation
+        # noise (a one-frame client in the serving report must not show
+        # phantom jitter).
+        one = round(float(arr[0]), 3)
+        p50, p95, jitter = one, one, 0.0
+    else:
+        p50 = round(float(np.percentile(arr, 50)), 3)
+        p95 = round(float(np.percentile(arr, 95)), 3)
+        jitter = round(float(arr.std()), 3)
     return {
         "mean_ms": round(mean, 3),
-        "p50_ms": round(float(np.percentile(arr, 50)), 3),
-        "p95_ms": round(float(np.percentile(arr, 95)), 3),
-        "jitter_ms": round(float(arr.std()), 3),
+        "p50_ms": p50,
+        "p95_ms": p95,
+        "jitter_ms": jitter,
         "fps": round(1e3 / max(mean, 1e-9), 2),
     }
+
+
+def upload_frame(rec: "Reconstructor", y, mask):
+    """Stage one acquisition onto the group: coil data NATURAL-scattered,
+    sampling mask broadcast — the single upload step both the streaming
+    loop and the serving scheduler issue (always through the verbs,
+    never raw device_put+specs).  ``y`` must already be channel-padded
+    to the group size."""
+    return rec.put_frame(np.asarray(y)), rec.put_const(np.asarray(mask))
+
+
+class DoubleBuffer:
+    """One-slot-ahead host→device staging.
+
+    JAX dispatch is asynchronous, so an upload issued right after a
+    solver launch lands while the solve is still in flight.  ``stage``
+    issues the upload for the NEXT item; ``take`` hands over the staged
+    device buffers (exactly once).  ``FrameStream`` primes it with frame
+    0 and restages behind every launch; the serving scheduler keeps one
+    per session and stages at enqueue time, so every client's next frame
+    rides behind the current batched tick."""
+
+    def __init__(self, upload):
+        self._upload = upload
+        self._slot = None
+
+    @property
+    def ready(self) -> bool:
+        return self._slot is not None
+
+    def stage(self, *args) -> None:
+        if self._slot is not None:
+            raise RuntimeError("DoubleBuffer.stage: slot already staged "
+                               "(take() the in-flight item first)")
+        self._slot = self._upload(*args)
+
+    def take(self):
+        if self._slot is None:
+            raise RuntimeError("DoubleBuffer.take: nothing staged")
+        slot, self._slot = self._slot, None
+        return slot
 
 
 @dataclasses.dataclass
@@ -132,16 +184,16 @@ class FrameStream:
         run_start = cache.snapshot()
         images, frame_ms, frame_builds = [], [], []
         # prime the double buffer with frame 0
-        buf = (rec.put_frame(y[0]), rec.put_const(np.asarray(masks[0])))
+        buf = DoubleBuffer(lambda f: upload_frame(rec, y[f], masks[f]))
+        buf.stage(0)
         for f in range(F):
             t0 = time.perf_counter()
             builds0 = cache.builds
-            yd, md = buf
+            yd, md = buf.take()
             u, img = fn(yd, md, fov_d, w_d, u, x_ref)
             # the solver is now in flight; upload frame f+1 behind it
             if f + 1 < F:
-                buf = (rec.put_frame(y[f + 1]),
-                       rec.put_const(np.asarray(masks[f + 1])))
+                buf.stage(f + 1)
             x_ref = self._damp(u)
             img.block_until_ready()
             frame_ms.append((time.perf_counter() - t0) * 1e3)

@@ -1,3 +1,22 @@
-from .engine import Engine, Request, make_serve_steps
+"""The serving layer: one scheduler for every real-time workload.
 
-__all__ = ["Engine", "Request", "make_serve_steps"]
+``StreamScheduler`` (admission, per-client backpressure, bucketed batch
+formation, latency/SLO accounting) drives both production workloads —
+``NlinvStreamWorkload`` (N concurrent MRI streams batched into one SPMD
+launch) and ``LMDecodeWorkload`` (slot-based greedy decode).  ``Engine``
+is the LM front door kept API-compatible with the pre-scheduler engine.
+"""
+
+from .engine import Engine, Request, make_serve_steps
+from .scheduler import (AdmissionError, ServeConfig, Session,
+                        StreamScheduler, Workload)
+from .workloads import (LMDecodeWorkload, NlinvStreamWorkload, SlotPool,
+                        stack_carries, unstack_carry)
+
+__all__ = [
+    "Engine", "Request", "make_serve_steps",
+    "AdmissionError", "ServeConfig", "Session", "StreamScheduler",
+    "Workload",
+    "LMDecodeWorkload", "NlinvStreamWorkload", "SlotPool",
+    "stack_carries", "unstack_carry",
+]

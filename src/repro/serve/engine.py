@@ -1,20 +1,21 @@
-"""Serving engine: prefill/decode step functions + a slot-based
-continuous-batching driver (the LM analogue of the paper's real-time
-reconstruction server: fixed problem size, bounded latency per step).
-"""
+"""LM serving entry point: prefill/decode step functions plus the
+``Engine`` front door.  Since the serve subsystem landed, ``Engine`` is
+a thin request-tracking wrapper over the shared
+:class:`~repro.serve.scheduler.StreamScheduler` driving
+:class:`~repro.serve.workloads.LMDecodeWorkload` — the same scheduler
+that batches concurrent NLINV streams; there is no bespoke decode loop
+here anymore."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import itertools
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..models import frontends, transformer
+from ..models import transformer
 
 
 def make_serve_steps(cfg, mesh=None, *, max_len=2048, batch=8,
@@ -73,63 +74,76 @@ class Request:
 
 
 class Engine:
-    """Greedy continuous-batching server over ``batch`` slots.
+    """Greedy continuous-batching LM server over ``batch`` KV slots.
 
-    Simplification vs production: slots decode in lockstep at a shared
-    position (per-slot kv_len masking handles ragged prompts by left-
-    aligning each new request at position 0 of its own slot-batch run);
-    one prefill per admission.  Deterministic: greedy argmax.
+    Front door only: admission, slot assignment, batching, ticking and
+    reclamation all live in the shared ``StreamScheduler`` +
+    ``LMDecodeWorkload`` (prefill at admission, one decode per tick,
+    slot freed through the explicit ``SlotPool`` on completion).
+    Request ids come from a monotonic counter — submitting after a
+    drain can never reuse a live rid.  Deterministic: greedy argmax.
     """
 
     def __init__(self, cfg, params, *, batch=4, max_len=512):
+        from .scheduler import ServeConfig, StreamScheduler
+        from .workloads import LMDecodeWorkload
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
-        pf, dec, init_cache = make_serve_steps(cfg, None, max_len=max_len,
-                                               batch=1)
-        self._prefill, self._decode = pf, dec
-        self._mk_cache = lambda: transformer.init_cache(cfg, 1, max_len,
-                                                        cfg.cdtype)
-        self.queue: list[Request] = []
-        self.active: dict[int, dict[str, Any]] = {}
+        self.workload = LMDecodeWorkload(cfg, params, batch=batch,
+                                         max_len=max_len)
+        # decode items are enqueued all at submit time, so the per-
+        # session depth bound must admit the longest request; admission
+        # (slot) pressure is the real LM bound.
+        self.scheduler = StreamScheduler(self.workload, ServeConfig(
+            max_concurrency=batch, max_queue=2 ** 30,
+            queue_depth=max(max_len, 1), buckets=(batch,)))
+        self._rids = itertools.count()
+        self._requests: dict[int, tuple[Request, object]] = {}
 
     def submit(self, prompt, max_new=32) -> int:
-        rid = len(self.queue)
-        self.queue.append(Request(rid, list(prompt), max_new))
+        rid = next(self._rids)
+        req = Request(rid, list(prompt), max_new)
+        sess = self.scheduler.open(client=f"req{rid}", prompt=req.prompt,
+                                   max_new=max_new)
+        # prefill (at admission) emits token 1; each decode tick emits one
+        for _ in range(max(max_new - 1, 0)):
+            self.scheduler.submit(sess, None)
+        self._requests[rid] = (req, sess)
         return rid
 
-    def _admit(self):
-        while self.queue and len(self.active) < self.batch:
-            req = self.queue.pop(0)
-            enc = frontends.synthetic_frontend(self.cfg, 1)
-            cache = self._mk_cache()
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            logits, cache = self._prefill(self.params, toks, cache, enc=enc)
-            nxt = int(jnp.argmax(logits[0]))
-            req.out.append(nxt)
-            self.active[req.rid] = {"req": req, "cache": cache,
-                                    "pos": len(req.prompt)}
-
-    def step(self):
-        """One decode step for every active request."""
-        self._admit()
+    def _collect(self) -> list[Request]:
         finished = []
-        for rid, st in list(self.active.items()):
-            req = st["req"]
-            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, st["cache"] = self._decode(self.params, tok,
-                                               st["cache"], st["pos"])
-            st["pos"] += 1
-            req.out.append(int(jnp.argmax(logits[0])))
-            if len(req.out) >= req.max_new or st["pos"] >= self.max_len - 1:
+        for rid, (req, sess) in list(self._requests.items()):
+            if (sess.admitted and not sess.done and not sess.pending
+                    and len(sess.results) >= req.max_new):
+                # prefill-only request (max_new <= 1): complete at
+                # admission, no decode tick ever fires for it
+                self.scheduler.close(sess)
+            if sess.done and not req.done:
+                req.out = list(sess.results)
                 req.done = True
                 finished.append(req)
-                del self.active[rid]
         return finished
 
-    def run(self):
-        done = []
-        while self.queue or self.active:
-            done.extend(self.step())
+    def step(self) -> list[Request]:
+        """One scheduler tick; returns the requests it completed."""
+        self.scheduler.tick()
+        return self._collect()
+
+    def run(self) -> list[Request]:
+        """Drain every submitted request; returns them in rid order."""
+        while True:
+            n = self.scheduler.drain()
+            # a drain that moved nothing and completed nothing cannot
+            # make progress on the next pass either
+            if not self._collect() and n == 0:
+                break
+            if all(req.done for req, _ in self._requests.values()):
+                break
+        done = [req for rid, (req, _) in sorted(self._requests.items())
+                if req.done]
+        for req in done:                 # returned once; engine stays usable
+            self._requests.pop(req.rid)
         return done

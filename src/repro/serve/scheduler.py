@@ -1,0 +1,263 @@
+"""One scheduler for N concurrent real-time streams (the serving layer).
+
+The paper's production setting (and the 2017 follow-up's, Schaetz et
+al., arXiv:1701.08361) is a continuously running reconstruction service
+fed by the scanner.  This module is that service's control plane,
+workload-agnostic: a :class:`StreamScheduler` owns admission, per-client
+queueing/backpressure, batch formation and latency/SLO accounting, and a
+:class:`Workload` implementation owns the actual device work — NLINV
+Newton solves batched into one SPMD launch, or LM token decode over KV
+slots (``repro.serve.workloads``).  Both production workloads run
+through this one loop; there is no per-workload driver.
+
+The lifecycle of one client:
+
+  open()    admission control: admitted up to ``max_concurrency``
+            (workload ``open_session`` runs: carry init / prefill),
+            queued up to ``max_queue`` beyond that, rejected past it.
+  submit()  per-session backpressure: at most ``queue_depth`` staged
+            work items; a real-time client past the bound has its frame
+            REJECTED (shed) rather than silently growing latency.
+            The workload's ``enqueue`` hook stages host→device uploads
+            here, so transfers overlap the in-flight tick.
+  tick()    batch formation: everything ready this instant, rounded up
+            to a bucketed batch width (``buckets``) so the compiled-
+            program set stays small; one ``Workload.step`` per tick.
+  close()   session teardown (workload ``close_session``: slot free /
+            carry drop) + admission of the next queued client.
+
+``report()`` emits per-client latency statistics via the same
+``latency_stats`` every latency number in the repo uses, plus the
+fraction of frames inside the real-time budget (``budget_ms``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Optional
+
+from ..nlinv.stream import latency_stats
+
+
+class AdmissionError(RuntimeError):
+    """open() past ``max_concurrency`` + ``max_queue``: the service is
+    full and the client must back off (the hard admission bound)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler policy knobs (one instance per scheduler)."""
+
+    max_concurrency: int = 8        # admitted sessions at once
+    max_queue: int = 16             # waiting sessions beyond that
+    queue_depth: int = 4            # staged work items per session
+    budget_ms: Optional[float] = None   # real-time SLO target per item
+    buckets: tuple = (1, 2, 4, 8)   # allowed batch widths (sorted)
+
+    def __post_init__(self):
+        if self.max_concurrency < 1:
+            raise ValueError("max_concurrency must be >= 1")
+        if self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        if not self.buckets or list(self.buckets) != sorted(self.buckets):
+            raise ValueError(f"buckets must be sorted+nonempty: "
+                             f"{self.buckets}")
+
+    def bucket(self, n: int) -> int:
+        """Smallest allowed batch width >= n (n capped at the largest)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+
+@dataclasses.dataclass
+class Session:
+    """One client's stream through the scheduler."""
+
+    sid: int
+    client: str
+    meta: dict = dataclasses.field(default_factory=dict)
+    state: Any = None               # workload-owned (carry / KV slot)
+    pending: deque = dataclasses.field(default_factory=deque)
+    results: list = dataclasses.field(default_factory=list)
+    latency_ms: list = dataclasses.field(default_factory=list)
+    rejected: int = 0               # frames shed by backpressure
+    admitted: bool = False
+    done: bool = False
+
+
+class Workload:
+    """What the scheduler schedules.  Implementations own all device
+    state; the scheduler never touches arrays."""
+
+    def open_session(self, session: Session) -> Any:
+        """Admission-time setup (carry init / prefill).  The return
+        value becomes ``session.state``."""
+        raise NotImplementedError
+
+    def enqueue(self, session: Session, item):
+        """Stage one submitted work item (hook for upload-at-enqueue;
+        the default stages nothing)."""
+        return item
+
+    def step(self, batch: list, width: int) -> list:
+        """Run one tick over ``batch`` = [(session, item), ...] with
+        ``len(batch) <= width`` (the bucketed launch width).  Returns
+        [(result, done), ...] aligned with ``batch``; results must be
+        materialized (the scheduler stamps completion time on return).
+        """
+        raise NotImplementedError
+
+    def close_session(self, session: Session) -> None:
+        """Teardown (slot free / carry drop)."""
+
+
+class StreamScheduler:
+    """Continuous batching of N client streams over one Workload."""
+
+    def __init__(self, workload: Workload,
+                 config: ServeConfig | None = None):
+        self.workload = workload
+        self.config = config or ServeConfig()
+        self.sessions: dict[int, Session] = {}   # admitted, by sid
+        self.waiting: deque[Session] = deque()
+        self.closed: list[Session] = []
+        self.ticks = 0
+        self.tick_ms: list[float] = []
+        self._sids = itertools.count()
+
+    # -- admission --------------------------------------------------------
+    def open(self, client: str = "client", **meta) -> Session:
+        """Admit (or queue) one new client stream; raises
+        :class:`AdmissionError` when the service is full."""
+        if (len(self.sessions) >= self.config.max_concurrency
+                and len(self.waiting) >= self.config.max_queue):
+            raise AdmissionError(
+                f"service full: {len(self.sessions)} admitted, "
+                f"{len(self.waiting)} waiting (max_queue="
+                f"{self.config.max_queue})")
+        s = Session(sid=next(self._sids), client=client, meta=dict(meta))
+        if len(self.sessions) < self.config.max_concurrency:
+            self._admit(s)
+        else:
+            self.waiting.append(s)
+        return s
+
+    def _admit(self, s: Session) -> None:
+        s.state = self.workload.open_session(s)
+        s.admitted = True
+        self.sessions[s.sid] = s
+
+    def _refill(self) -> None:
+        while self.waiting and \
+                len(self.sessions) < self.config.max_concurrency:
+            self._admit(self.waiting.popleft())
+
+    # -- per-session queueing (backpressure) ------------------------------
+    def submit(self, session: Session, item) -> bool:
+        """Enqueue one work item (a frame / a decode step).  Returns
+        False — the item was SHED — once ``queue_depth`` items are
+        already staged: a real-time client must drop frames, not let
+        its latency grow without bound."""
+        if session.done:
+            raise RuntimeError(f"submit on closed session {session.sid}")
+        if len(session.pending) >= self.config.queue_depth:
+            session.rejected += 1
+            return False
+        staged = self.workload.enqueue(session, item)
+        session.pending.append((staged, time.perf_counter()))
+        return True
+
+    # -- the tick ---------------------------------------------------------
+    def tick(self) -> int:
+        """Admit what fits, batch everything ready, run one Workload
+        step.  Returns the number of items completed."""
+        self._refill()
+        ready = [s for _, s in sorted(self.sessions.items()) if s.pending]
+        if not ready:
+            return 0
+        cap = self.config.buckets[-1]
+        if len(ready) > cap:
+            # overcommitted: rotate the start so no client is starved
+            r = self.ticks % len(ready)
+            ready = (ready[r:] + ready[:r])[:cap]
+        width = self.config.bucket(len(ready))
+        batch = [(s, s.pending.popleft()) for s in ready]
+        t0 = time.perf_counter()
+        out = self.workload.step([(s, item) for s, (item, _) in batch],
+                                 width)
+        t1 = time.perf_counter()
+        self.ticks += 1
+        self.tick_ms.append((t1 - t0) * 1e3)
+        if len(out) != len(batch):
+            raise RuntimeError(
+                f"{type(self.workload).__name__}.step returned {len(out)} "
+                f"results for a batch of {len(batch)}")
+        for (s, (_, t_submit)), (result, done) in zip(batch, out):
+            s.results.append(result)
+            s.latency_ms.append((t1 - t_submit) * 1e3)
+            if done:
+                self.close(s)
+        return len(batch)
+
+    def close(self, session: Session) -> None:
+        """End one stream: workload teardown, then admit from the
+        waiting queue."""
+        if session.done:
+            return
+        self.workload.close_session(session)
+        session.done = True
+        session.pending.clear()
+        self.sessions.pop(session.sid, None)
+        if session in self.waiting:
+            self.waiting.remove(session)
+        self.closed.append(session)
+        self._refill()
+
+    def drain(self) -> int:
+        """Tick until no admitted session has work and the waiting
+        queue cannot make progress.  Returns items completed."""
+        total = 0
+        while True:
+            n = self.tick()
+            total += n
+            if n == 0 and not any(s.pending for s in self.sessions.values()):
+                self._refill()
+                if not any(s.pending for s in self.sessions.values()):
+                    return total
+
+    # -- accounting -------------------------------------------------------
+    def report(self) -> dict:
+        """Per-client latency/SLO table + aggregate throughput, on the
+        repo-wide ``latency_stats``."""
+        budget = self.config.budget_ms
+        clients: dict[str, dict] = {}
+        for s in itertools.chain(self.closed, self.waiting,
+                                 self.sessions.values()):
+            row = {"sid": s.sid, "frames": len(s.latency_ms),
+                   "rejected": s.rejected,
+                   **latency_stats(s.latency_ms)}
+            if budget is not None:
+                inside = sum(1 for t in s.latency_ms if t <= budget)
+                row["slo"] = {
+                    "budget_ms": budget,
+                    "met": round(inside / max(len(s.latency_ms), 1), 3)}
+            clients[s.client] = row
+        frames = sum(len(s.latency_ms)
+                     for s in itertools.chain(self.closed, self.waiting,
+                                              self.sessions.values()))
+        wall = sum(self.tick_ms)
+        return {
+            "clients": clients,
+            "aggregate": {
+                "frames": frames,
+                "ticks": self.ticks,
+                "tick": latency_stats(self.tick_ms),
+                "fps": round(frames / max(wall, 1e-9) * 1e3, 2),
+                "rejected": sum(c["rejected"] for c in clients.values()),
+            },
+        }

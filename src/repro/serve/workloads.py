@@ -1,0 +1,232 @@
+"""The two production workloads behind ``StreamScheduler``.
+
+:class:`NlinvStreamWorkload` — N concurrent real-time NLINV streams.
+Independent clients' Newton solves are stacked on a leading batch dim of
+the ``(rho, chat)`` carry pytree and solved in ONE SPMD launch
+(``Reconstructor.fn_batched``): the per-iteration collectives of B
+solves coalesce into one rendezvous each, which is where the batching
+win comes from.  Two invariants keep the tick cheap:
+
+  * the stacked carry is PERSISTENT — while the ready set is stable
+    (the steady state of K clients streaming) the carry never leaves
+    the device or gets restacked; it is sliced back into per-session
+    state only when the membership changes (client joins/leaves/skips
+    a tick: the "mixed frame phases" case);
+  * uploads happen at submit() time through the same
+    ``upload_frame`` helper the single-stream ``FrameStream`` uses, so
+    every client's next acquisition lands behind the in-flight tick.
+
+:class:`LMDecodeWorkload` — greedy continuous-batching LM decode, the
+old bespoke ``Engine`` loop re-expressed as a Workload: admission =
+prefill into a KV slot from the explicit :class:`SlotPool`, one tick =
+one decode step per active request, close = slot free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nlinv.operators import sobolev_weight
+from ..nlinv.recon import Reconstructor, pad_channels
+from ..nlinv.stream import upload_frame
+from .scheduler import Session, Workload
+
+
+def stack_carries(carries: list) -> dict:
+    """Stack per-session ``(rho, chat)`` carries on a new leading batch
+    dim (one jnp.stack per leaf)."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *carries)
+
+
+def unstack_carry(stacked, i: int):
+    """Slice session ``i``'s carry back out of the stacked pytree."""
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+class NlinvStreamWorkload(Workload):
+    """B NLINV frame solves per tick, one batched SPMD launch.
+
+    Work item (per ``submit``): a ``(y, mask)`` acquisition with ``y``
+    of shape (J, X, Y) (channel-padded here) and ``mask`` (X, Y).
+    Result: the reconstructed (X, Y) image (device array, ready).
+    Geometry (grid, coil count) is fixed per workload — one scanner
+    protocol per scheduler; the first session pins it.
+    """
+
+    def __init__(self, rec: Reconstructor, *, damping: float = 0.9):
+        self.rec = rec
+        self.damping = damping
+        self._damp = jax.jit(
+            lambda u: jax.tree.map(lambda a: damping * a, u))
+        self._geom = None            # (J_padded, grid), pinned by 1st open
+        self._fov_d = self._w_d = None
+        # persistent stacked carry: (sids tuple, u_stack, x_ref_stack),
+        # plus the Session objects whose carries live in that stack
+        self._stack = None
+        self._by_sid: dict = {}
+
+    # -- session lifecycle ------------------------------------------------
+    def open_session(self, session: Session):
+        g = int(session.meta["grid"])
+        J = pad_channels(np.zeros((int(session.meta["ncoils"]), 1, 1),
+                                  np.complex64),
+                         self.rec.comm.size).shape[0]
+        if self._geom is None:
+            self._geom = (J, g)
+            self._fov_d = self.rec.put_const(
+                np.asarray(session.meta["fov"]))
+            self._w_d = self.rec.put_const(
+                np.asarray(session.meta.get("weight",
+                                            sobolev_weight(g))))
+        elif self._geom != (J, g):
+            raise ValueError(
+                f"session geometry (J={J}, grid={g}) does not match the "
+                f"workload's {self._geom}: one protocol per scheduler")
+        u = self.rec.init_carry(J, g)
+        # x_ref starts equal to u but must be a distinct buffer
+        return {"u": u, "x_ref": jax.tree.map(lambda a: a + 0, u)}
+
+    def enqueue(self, session: Session, item):
+        """Upload at submit time: the scatter/bcast of this frame lands
+        while the current tick's solve is still in flight (the serving
+        analogue of FrameStream's double buffer)."""
+        y, mask = item
+        y = pad_channels(np.asarray(y), self.rec.comm.size)
+        return upload_frame(self.rec, y, mask)
+
+    def close_session(self, session: Session) -> None:
+        self._spill(keep=lambda sid: sid != session.sid)
+
+    # -- the batched tick -------------------------------------------------
+    def _spill(self, keep=lambda sid: True) -> None:
+        """Write the stacked carry back into per-session state (dropping
+        sessions ``keep`` rejects) and forget the stack."""
+        if self._stack is None:
+            return
+        sids, ub, xb = self._stack
+        self._stack = None
+        for i, sid in enumerate(sids):
+            s = self._by_sid.get(sid)
+            if s is None or not keep(sid):
+                continue
+            s.state["u"] = unstack_carry(ub, i)
+            s.state["x_ref"] = unstack_carry(xb, i)
+
+    def step(self, batch: list, width: int) -> list:
+        sessions = [s for s, _ in batch]
+        sids = tuple(s.sid for s in sessions)
+        B = len(batch)
+        if self._stack is not None and self._stack[0][:B] == sids \
+                and len(self._stack[0]) == width:
+            # steady state: same members, same width — reuse in place
+            _, ub, xb = self._stack
+        else:
+            # membership or width changed: write everyone's carry back
+            # to their session BEFORE the new map is installed
+            self._spill()
+            # pad the launch to the bucket width by replicating the
+            # last session's row (vmap rows are independent; padded
+            # rows are computed and discarded)
+            rows = sessions + [sessions[-1]] * (width - B)
+            ub = stack_carries([s.state["u"] for s in rows])
+            xb = stack_carries([s.state["x_ref"] for s in rows])
+        pads = [item for _, item in batch]
+        pads += [pads[-1]] * (width - B)
+        yb = jnp.stack([yd for yd, _ in pads])
+        mb = jnp.stack([md for _, md in pads])
+        # the stacked carry is replaced every tick, so its two largest
+        # buffers are donated to the launch (as in FrameStream)
+        fn = self.rec.fn_batched(width, donate=True)
+        ub, imgb = fn(yb, mb, self._fov_d, self._w_d, ub, xb)
+        xb = self._damp(ub)
+        imgb.block_until_ready()
+        self._stack = (sids + (sids[-1],) * (width - B), ub, xb)
+        self._by_sid = {s.sid: s for s in sessions}
+        # NLINV streams are long-lived: never done from inside a tick
+        return [(imgb[i], False) for i in range(B)]
+
+
+class SlotPool:
+    """Explicit KV-slot bookkeeping for continuous batching: ``assign``
+    takes the lowest free slot, ``free`` returns it.  Every transition
+    is checked — a double free or an over-assign is a bug in the caller,
+    never silent state corruption."""
+
+    def __init__(self, n: int):
+        if n < 1:
+            raise ValueError("SlotPool needs at least one slot")
+        self.n = n
+        self._free = list(range(n))
+        self._used: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> tuple:
+        return tuple(sorted(self._used))
+
+    def assign(self) -> int:
+        if not self._free:
+            raise RuntimeError(f"SlotPool exhausted ({self.n} slots in use)")
+        slot = self._free.pop(0)
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise RuntimeError(f"SlotPool.free({slot}): slot not assigned")
+        self._used.remove(slot)
+        self._free.append(slot)
+        self._free.sort()
+
+
+class LMDecodeWorkload(Workload):
+    """Greedy LM decode as a Workload: one KV slot per admitted request,
+    one decode step per work item.  Work items carry no payload (the
+    token fed back is the previous output); results are token ids."""
+
+    def __init__(self, cfg, params, *, batch: int = 4, max_len: int = 512):
+        from ..models import transformer
+        from .engine import make_serve_steps
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        pf, dec, _ = make_serve_steps(cfg, None, max_len=max_len, batch=1)
+        self._prefill, self._decode = pf, dec
+        self._mk_cache = lambda: transformer.init_cache(cfg, 1, max_len,
+                                                        cfg.cdtype)
+        self.slots = SlotPool(batch)
+
+    def open_session(self, session: Session):
+        from ..models import frontends
+        prompt = list(session.meta["prompt"])
+        slot = self.slots.assign()
+        enc = frontends.synthetic_frontend(self.cfg, 1)
+        cache = self._mk_cache()
+        toks = jnp.asarray([prompt], jnp.int32)
+        logits, cache = self._prefill(self.params, toks, cache, enc=enc)
+        # the prefill emits the first output token at admission
+        session.results.append(int(jnp.argmax(logits[0])))
+        return {"slot": slot, "cache": cache, "pos": len(prompt)}
+
+    def step(self, batch: list, width: int) -> list:
+        out = []
+        for session, _ in batch:
+            st = session.state
+            tok = jnp.asarray([[session.results[-1]]], jnp.int32)
+            logits, st["cache"] = self._decode(self.params, tok,
+                                               st["cache"], st["pos"])
+            st["pos"] += 1
+            nxt = int(jnp.argmax(logits[0]))
+            produced = len(session.results) + 1   # incl. this token
+            done = (produced >= int(session.meta["max_new"])
+                    or st["pos"] >= self.max_len - 1)
+            out.append((nxt, done))
+        return out
+
+    def close_session(self, session: Session) -> None:
+        self.slots.free(session.state["slot"])

@@ -219,3 +219,64 @@ def test_bench_timing_fields():
     assert [f.name for f in dataclasses.fields(Timing)] == [
         "wall_ms", "compile_ms", "steady_ms", "p50_ms", "p95_ms",
         "jitter_ms", "iters", "warmup", "plan_cache"]
+
+
+# -- the repro.serve serving-layer surface (ISSUE 7) ------------------------
+
+EXPECTED_SERVE_ALL = [
+    "Engine", "Request", "make_serve_steps",
+    "AdmissionError", "ServeConfig", "Session", "StreamScheduler",
+    "Workload",
+    "LMDecodeWorkload", "NlinvStreamWorkload", "SlotPool",
+    "stack_carries", "unstack_carry",
+]
+
+# the scheduler contract both workloads (and any future one) code against
+EXPECTED_SCHEDULER = {
+    "open": ("self", "client", "meta"),
+    "submit": ("self", "session", "item"),
+    "tick": ("self",),
+    "drain": ("self",),
+    "close": ("self", "session"),
+    "report": ("self",),
+}
+
+EXPECTED_WORKLOAD_HOOKS = {
+    "open_session": ("self", "session"),
+    "enqueue": ("self", "session", "item"),
+    "step": ("self", "batch", "width"),
+    "close_session": ("self", "session"),
+}
+
+
+def test_serve_all_snapshot():
+    import repro.serve as serve
+    assert list(serve.__all__) == EXPECTED_SERVE_ALL
+    for name in EXPECTED_SERVE_ALL:
+        assert hasattr(serve, name), f"__all__ names missing attr {name}"
+
+
+def test_serve_scheduler_surface():
+    from repro.serve import StreamScheduler, Workload
+    assert _public_methods(StreamScheduler) == set(EXPECTED_SCHEDULER)
+    for name, params in EXPECTED_SCHEDULER.items():
+        got = _param_names(getattr(StreamScheduler, name))
+        assert got == params, f"StreamScheduler.{name}: {got} != {params}"
+    for name, params in EXPECTED_WORKLOAD_HOOKS.items():
+        got = _param_names(getattr(Workload, name))
+        assert got == params, f"Workload.{name}: {got} != {params}"
+
+
+def test_serve_unified_scheduler():
+    """Acceptance row: LM decode and NLINV streaming both run through
+    the ONE StreamScheduler — the workloads are Workload subclasses and
+    Engine drives the shared scheduler, with no bespoke decode loop."""
+    from repro.serve import (Engine, LMDecodeWorkload, NlinvStreamWorkload,
+                             Workload)
+    assert issubclass(NlinvStreamWorkload, Workload)
+    assert issubclass(LMDecodeWorkload, Workload)
+    src = inspect.getsource(Engine)
+    assert "StreamScheduler" in src and "LMDecodeWorkload" in src
+    # the old bespoke driver internals are gone from the front door
+    assert not hasattr(Engine, "_admit")
+    assert "def _admit" not in src and "self.active" not in src

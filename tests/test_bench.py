@@ -18,6 +18,7 @@ import pytest
 from repro.bench import (ArtifactError, BenchContext, compare_artifacts,
                          load_artifact, make_artifact, measure, run_key,
                          scenarios, validate_artifact, write_artifact)
+from repro.bench.compare import format_report
 from repro.bench.compare import main as compare_main
 from repro.bench.registry import DEVICE_COUNTS, SIZES
 
@@ -32,11 +33,13 @@ SCRIPT_FIGURES = {
     "fig89_operators.py": {"fig89"},
     "table1_operators.py": {"table1"},
     "lm_steps.py": {"lm"},
+    "serve_streams.py": {"serve"},
 }
 
 # the acceptance sweep: these figures must be registered with tiny-CI
 # coverage at 1 AND 4 devices
-CI_FIGURES = ("fig4", "fig5", "fig6", "fig89", "table1", "gridding", "stream")
+CI_FIGURES = ("fig4", "fig5", "fig6", "fig89", "table1", "gridding",
+              "stream", "serve")
 
 
 def _fake_run(scenario="figX.thing", figure="figX", devices=1, size="tiny",
@@ -144,6 +147,31 @@ def test_compare_sub_floor_base_cannot_hide_a_regression():
     base, new = _two_artifacts(0.1, 0.9)
     cmp = compare_artifacts(base, new, threshold_pct=75.0, min_ms=1.0)
     assert cmp.ok and not cmp.regressions
+
+
+def test_compare_gates_per_client_p95():
+    """Serve scenarios: the worst-client p95 (extra.client_p95_ms) is
+    gated with the same threshold — a starved client fails the compare
+    even when the mean tick stayed fast."""
+    p95 = lambda v: {"extra": {"client_p95_ms": v}}
+    base, new = _two_artifacts(4.0, 4.0, **p95(20.0))
+    base["scenarios"]["figX.thing@d1@tiny"]["extra"] = {"client_p95_ms": 8.0}
+    cmp = compare_artifacts(base, new, threshold_pct=25.0)
+    assert not cmp.ok and not cmp.regressions
+    assert cmp.p95_regressions[0]["ratio"] == 2.5
+    assert "P95 REGRESSION" in format_report(cmp)
+    # within threshold: passes
+    base["scenarios"]["figX.thing@d1@tiny"]["extra"] = {"client_p95_ms": 18.0}
+    assert compare_artifacts(base, new, threshold_pct=25.0).ok
+    # rows without the column (every non-serve scenario) are ignored
+    b2, n2 = _two_artifacts(4.0, 4.0)
+    assert compare_artifacts(b2, n2).p95_regressions == []
+    # machine-speed calibration scales the new p95 like the steady state
+    b3 = make_artifact([_fake_run(steady=4.0, **p95(10.0))], sha="a",
+                       host={}, calibration_ms=1.0)
+    n3 = make_artifact([_fake_run(steady=12.0, **p95(30.0))], sha="b",
+                       host={}, calibration_ms=3.0)
+    assert compare_artifacts(b3, n3).ok      # 3x slower host cancels out
 
 
 def test_compare_normalizes_by_machine_speed():

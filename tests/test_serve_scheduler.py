@@ -1,0 +1,221 @@
+"""The serving layer (ISSUE 7): scheduler admission/backpressure/
+bucketing on a stub workload, SlotPool reclamation, the double-buffer
+helper, latency_stats guards, and batched-vs-sequential NLINV parity
+through the real scheduler on 1 (in-process) and 4 (subprocess)
+devices — including mixed per-client frame phases."""
+
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+from repro.nlinv.stream import DoubleBuffer, latency_stats
+from repro.serve import (AdmissionError, ServeConfig, SlotPool,
+                         StreamScheduler, Workload)
+
+
+class StubWorkload(Workload):
+    """Records every scheduler interaction; items pass through as
+    results, and an item equal to "last" completes its session."""
+
+    def __init__(self):
+        self.opened, self.closed, self.steps = [], [], []
+
+    def open_session(self, session):
+        self.opened.append(session.sid)
+        return {}
+
+    def step(self, batch, width):
+        self.steps.append((tuple(s.sid for s, _ in batch), width))
+        return [(item, item == "last") for _, item in batch]
+
+    def close_session(self, session):
+        self.closed.append(session.sid)
+
+
+# ---------------------------------------------------------------------------
+# scheduler control plane (no device work)
+# ---------------------------------------------------------------------------
+
+def test_admission_concurrency_queue_and_reject():
+    wl = StubWorkload()
+    sched = StreamScheduler(wl, ServeConfig(max_concurrency=2, max_queue=1))
+    a, b = sched.open("a"), sched.open("b")
+    assert a.admitted and b.admitted and wl.opened == [a.sid, b.sid]
+    c = sched.open("c")                    # queued: concurrency is full
+    assert not c.admitted and len(sched.waiting) == 1
+    with pytest.raises(AdmissionError):    # queue is full too
+        sched.open("d")
+    # closing an admitted session admits the queued one
+    sched.close(a)
+    assert c.admitted and wl.closed == [a.sid]
+
+
+def test_backpressure_sheds_past_queue_depth():
+    sched = StreamScheduler(StubWorkload(), ServeConfig(queue_depth=2))
+    s = sched.open("a")
+    assert sched.submit(s, 1) and sched.submit(s, 2)
+    assert not sched.submit(s, 3)          # shed, not queued
+    assert s.rejected == 1 and len(s.pending) == 2
+    sched.tick()                           # frees a slot in the queue
+    assert sched.submit(s, 3)
+
+
+def test_tick_batches_ready_sessions_at_bucketed_width():
+    wl = StubWorkload()
+    sched = StreamScheduler(wl, ServeConfig(buckets=(1, 2, 4)))
+    ss = [sched.open(f"c{i}") for i in range(3)]
+    for s in ss:
+        sched.submit(s, "x")
+    assert sched.tick() == 3
+    (sids, width), = wl.steps
+    assert sids == tuple(s.sid for s in ss) and width == 4   # 3 -> bucket 4
+    assert sched.tick() == 0               # nothing ready
+
+
+def test_done_result_closes_session_and_refills_from_queue():
+    wl = StubWorkload()
+    sched = StreamScheduler(wl, ServeConfig(max_concurrency=1, max_queue=4))
+    a = sched.open("a")
+    b = sched.open("b")                    # waits for a's slot
+    sched.submit(a, "last")
+    sched.tick()
+    assert a.done and wl.closed == [a.sid]
+    assert b.admitted                      # refilled at close
+    sched.submit(b, "x")
+    assert sched.drain() == 1
+    assert b.results == ["x"] and not b.done
+
+
+def test_overcommit_rotates_so_no_client_starves():
+    wl = StubWorkload()
+    sched = StreamScheduler(wl, ServeConfig(buckets=(1, 2)))
+    ss = [sched.open(f"c{i}") for i in range(4)]
+    for s in ss:
+        for _ in range(2):
+            sched.submit(s, "x")
+    sched.drain()
+    served = [sid for sids, _ in wl.steps for sid in sids]
+    assert all(served.count(s.sid) == 2 for s in ss)
+
+
+def test_report_latency_slo_and_single_sample_guard():
+    sched = StreamScheduler(StubWorkload(),
+                            ServeConfig(budget_ms=1e6))
+    s = sched.open("a")
+    sched.submit(s, "x")
+    sched.tick()
+    rep = sched.report()
+    row = rep["clients"]["a"]
+    assert row["frames"] == 1
+    # single-sample window: no NaN/interp jitter, SLO met
+    assert row["jitter_ms"] == 0.0 and row["p95_ms"] == row["p50_ms"]
+    assert row["slo"]["met"] == 1.0
+    assert rep["aggregate"]["frames"] == 1 and rep["aggregate"]["ticks"] == 1
+
+
+def test_latency_stats_single_sample_guard():
+    s = latency_stats([7.25])
+    assert s["jitter_ms"] == 0.0
+    assert s["p50_ms"] == s["p95_ms"] == 7.25
+    assert latency_stats([])["jitter_ms"] == 0.0
+    many = latency_stats([1.0, 2.0, 3.0, 10.0])
+    assert many["p95_ms"] > many["p50_ms"] and many["jitter_ms"] > 0
+
+
+def test_double_buffer_stage_take_discipline():
+    log = []
+    buf = DoubleBuffer(lambda f: (log.append(f), f)[1])
+    with pytest.raises(RuntimeError):
+        buf.take()                         # nothing staged
+    buf.stage(0)
+    assert buf.ready and log == [0]
+    with pytest.raises(RuntimeError):
+        buf.stage(1)                       # one slot only
+    assert buf.take() == 0 and not buf.ready
+    buf.stage(1)
+    assert buf.take() == 1
+
+
+# ---------------------------------------------------------------------------
+# SlotPool reclamation (the serve/engine.py bug-sweep satellite)
+# ---------------------------------------------------------------------------
+
+def test_slot_pool_full_batch_exhaustion():
+    pool = SlotPool(2)
+    assert pool.assign() == 0 and pool.assign() == 1
+    assert pool.available == 0 and pool.in_use == (0, 1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.assign()
+
+
+def test_slot_pool_mid_stream_completion_and_refill():
+    pool = SlotPool(3)
+    slots = [pool.assign() for _ in range(3)]
+    pool.free(slots[1])                    # the middle request finishes
+    assert pool.in_use == (0, 2)
+    assert pool.assign() == 1              # lowest free slot is reused
+    with pytest.raises(RuntimeError, match="not assigned"):
+        pool.free(99)
+    pool.free(0)
+    with pytest.raises(RuntimeError, match="not assigned"):
+        pool.free(0)                       # double free is loud
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-sequential NLINV parity through the real scheduler
+# ---------------------------------------------------------------------------
+
+NLINV_PARITY = """
+from repro.core import Environment
+from repro.nlinv import phantom
+from repro.nlinv.recon import Reconstructor
+from repro.nlinv.stream import stream_movie
+from repro.serve import NlinvStreamWorkload, ServeConfig, StreamScheduler
+
+comm = Environment().subgroup({ndev})
+K, F = 3, 4
+datas = [phantom.make_dataset(n=16, ncoils=4, nspokes=7, frames=F, seed=s)
+         for s in range(K)]
+rec = Reconstructor(comm, newton=2, cg_iters=4, channel_sum="crop")
+sched = StreamScheduler(NlinvStreamWorkload(rec, damping=0.9),
+                        ServeConfig(max_concurrency=4, buckets=(1, 2, 4)))
+ss = [sched.open(client=f"c{{k}}", grid=datas[k]["grid"], ncoils=4,
+                 fov=datas[k]["fov"]) for k in range(K)]
+# mixed frame phases: client 0 skips tick 2 entirely
+skipped = [(0, 2)]
+for f in range(F):
+    for k in range(K):
+        if (k, f) not in skipped:
+            assert sched.submit(ss[k], (datas[k]["y"][f],
+                                        datas[k]["masks"][f]))
+    sched.tick()
+sched.drain()
+for k in range(K):
+    frames = [f for f in range(F) if (k, f) not in skipped]
+    sub = dict(datas[k], y=datas[k]["y"][frames],
+               masks=datas[k]["masks"][frames])
+    ref, _ = stream_movie(sub, comm=comm, newton=2, cg_iters=4, damping=0.9)
+    assert len(ss[k].results) == len(frames)
+    for i in range(len(frames)):
+        a, b = np.asarray(ss[k].results[i]), np.asarray(ref[i])
+        err = np.abs(a - b).max() / max(np.abs(b).max(), 1e-30)
+        check(f"client{{k}} frame{{i}} parity ({{err:.2e}})", err < 1e-5)
+# plan bucketing: widths 2 and 4 (never 3) were compiled, and each
+# bucket is a visible plan-cache entry keyed on its width
+widths = {{key[3] for key in rec.plan_cache._plans
+          if key[:2] == ("nlinv", "frame_batched")}}
+check(f"bucketed widths {{sorted(widths)}}", widths == {{2, 4}})
+"""
+
+
+def _run_parity(ndev):
+    out = run_with_devices(NLINV_PARITY.format(ndev=ndev), ndev)
+    assert "FAIL" not in out
+
+
+def test_scheduler_parity_1dev():
+    _run_parity(1)
+
+
+def test_scheduler_parity_4dev():
+    _run_parity(4)

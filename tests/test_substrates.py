@@ -98,6 +98,12 @@ def test_serving_engine_continuous_batching():
     for a, b in zip(sorted(done, key=lambda r: r.rid),
                     sorted(done2, key=lambda r: r.rid)):
         assert a.out == b.out
+    # rids stay unique after a drain: a later submit must not collide
+    # with an already-completed request's id
+    late = eng.submit([7, 8], max_new=2)
+    assert late not in rids
+    (r,) = eng.run()
+    assert r.rid == late and len(r.out) == 2
 
 
 def test_pipeline_determinism_and_structure():
