@@ -2,8 +2,9 @@
 # CI entry point, in named tiers:
 #
 #   scripts/ci.sh              # all  = fast + full (the tier-1 gate)
-#   scripts/ci.sh fast         # public-API snapshot + docs link-check
-#                              #   + doctests (~1 min, fails on drift)
+#   scripts/ci.sh fast         # public-API snapshot + kernel-registry
+#                              #   harness (CPU) + docs link-check
+#                              #   + doctests (fails on drift)
 #   scripts/ci.sh full         # tier-1 pytest, twice: on the host's single
 #                              #   default device AND under 4 simulated host
 #                              #   devices (real multi-device mesh ambient;
@@ -35,6 +36,11 @@ run_fast() {
     # full sweeps below re-collect it, which is harmless.
     echo "=== public-API snapshot (repro.core / repro.bench surface) ==="
     python -m pytest tests/test_api_surface.py -q
+
+    echo "=== kernel-registry harness (every spec: parity/fallback/props, CPU) ==="
+    # deterministic blocks: CI pins every spec to its declared default
+    REPRO_KERNEL_BLOCKS=default \
+        python -m pytest tests/test_kernel_registry.py -q
 
     echo "=== docs link-check (relative links in README.md + docs/) ==="
     python - <<'EOF'

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from ...kernels import registry as kreg
 from ...nlinv import phantom
 from ...nlinv.operators import sobolev_weight
 from ...nlinv.recon import Reconstructor, pad_channels
@@ -89,7 +90,11 @@ def cg_fused(ctx):
     speedup = round(unfused_ms / max(fused_ms, 1e-9), 3)
     extra = {"grid": g, "ncoils": d["ncoils"],
              "unfused_steady_ms": unfused_ms,
-             "fused_speedup": speedup}
+             "fused_speedup": speedup,
+             # the block choices the fused frame traced with (tuned on
+             # TPU, default/pinned elsewhere) — the autotuner's output
+             # is part of the artifact, per plan
+             "kernel_blocks": kreg.choices("cg_fused")}
     out = t_f.as_dict()
     out["steady_ms"] = fused_ms
     return {**out, "extra": extra}

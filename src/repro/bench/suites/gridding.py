@@ -9,6 +9,7 @@ library-port win for the frame loop.
 
 from __future__ import annotations
 
+from ...kernels import registry as kreg
 from ...lib.gridding import plan_gridding, radial_trajectory
 from ...lib.plan import PlanCache
 from ..registry import scenario
@@ -28,4 +29,7 @@ def plan_cold_vs_hit(ctx):
             "extra": {"grid": p["grid"], "nspokes": p["nspokes"],
                       "cold_ms": t.compile_ms, "hit_ms": t.steady_ms,
                       "speedup_cold_vs_hit": round(
-                          t.compile_ms / max(t.steady_ms, 1e-6), 1)}}
+                          t.compile_ms / max(t.steady_ms, 1e-6), 1),
+                      # the (bs,) sample-block choices baked into the
+                      # plan key by the registry autotuner
+                      "kernel_blocks": kreg.choices("gridding")}}

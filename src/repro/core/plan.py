@@ -77,6 +77,16 @@ class Plan:
     def __call__(self, *args, **kw):
         return self.fn(*args, **kw)
 
+    @classmethod
+    def value(cls, key: tuple, payload: Any, lib: str = "", op: str = "",
+              meta: dict | None = None) -> "Plan":
+        """A plan whose 'program' is a cached decision rather than a
+        compiled fn — calling it returns ``payload``.  Used for
+        plan-build-time choices that must share the PlanCache counter
+        discipline (e.g. the kernel block-size autotuner's winners)."""
+        return cls(key=key, fn=lambda: payload, lib=lib, op=op,
+                   meta=dict(meta or {}))
+
     def __repr__(self) -> str:
         return f"Plan({self.lib}.{self.op}, key_hash={hash(self.key):#x})"
 

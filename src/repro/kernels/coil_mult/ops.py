@@ -1,47 +1,171 @@
-"""jit'd complex-array wrappers with backend dispatch for the coil ops."""
+"""jit'd complex-array wrappers with registry dispatch for the coil ops.
+
+All four ops share one tiling contract: a (J, X, Y) coil stack blocked
+``bx`` rows of X at a time (declared once in the specs below).  The
+``supports`` rules also close a hole the old hand-rolled dispatch had:
+``auto`` now falls back to the jnp ref for X that doesn't tile instead
+of tripping the kernel's divisibility assert on TPU.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu, split
 from .kernel import (coil_adjoint_pallas, coil_forward_pallas,
                      coil_lincomb_pallas, coil_scale_mult_pallas,
                      plane_mult_pallas)
 from .ref import (coil_adjoint_ref, coil_forward_ref, coil_lincomb_ref,
                   plane_mult_ref)
 
-
-def _on_tpu():
-    return jax.default_backend() == "tpu"
-
-
-def _split(x):
-    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+_LAYOUT = "(J, X, Y) complex stack -> re/im f32, bx-row blocks of X"
+_SPACE = ((8,), (16,), (32,), (64,), (128,))
 
 
-def coil_forward(coils, x, impl="auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp":
+def _cplx(key, shape):
+    kr, ki = jax.random.split(key)
+    return (jax.random.normal(kr, shape) +
+            1j * jax.random.normal(ki, shape)).astype(jnp.complex64)
+
+
+def _forward_samples(i):
+    j, x, y = [(4, 32, 32), (6, 64, 128)][i]
+    kc, kx = jax.random.split(jax.random.PRNGKey(300 + i))
+    coils, img = _cplx(kc, (j, x, y)), _cplx(kx, (x, y))
+    return (coils, img), {}, coil_forward_ref(coils, img)
+
+
+def _forward_shape_case(seed, m, y):
+    if m == 0:
+        return None                       # an empty coil plane is not a case
+    kc, kx = jax.random.split(jax.random.PRNGKey(seed))
+    coils, img = _cplx(kc, (3, m, y)), _cplx(kx, (m, y))
+    return (coils, img), {}, coil_forward_ref(coils, img)
+
+
+def _adjoint_samples(i):
+    j, x, y = [(4, 32, 32), (6, 64, 128)][i]
+    kc, kz, km = jax.random.split(jax.random.PRNGKey(310 + i), 3)
+    coils, z = _cplx(kc, (j, x, y)), _cplx(kz, (j, x, y))
+    mask = None if i == 0 else \
+        (jax.random.uniform(km, (x, y)) > 0.5).astype(jnp.float32)
+    return (coils, z), {"mask": mask}, coil_adjoint_ref(coils, z, mask)
+
+
+def _adjoint_shape_case(seed, m, y):
+    if m == 0:
+        return None
+    kc, kz = jax.random.split(jax.random.PRNGKey(seed))
+    coils, z = _cplx(kc, (3, m, y)), _cplx(kz, (3, m, y))
+    return (coils, z), {}, coil_adjoint_ref(coils, z, None)
+
+
+def _lincomb_samples(i):
+    j, x, y = [(4, 32, 32), (6, 64, 64)][i]
+    ka, kx, kb, ky, ks = jax.random.split(jax.random.PRNGKey(320 + i), 5)
+    a, xs = _cplx(ka, (x, y)), _cplx(kx, (j, x, y))
+    if i == 0:                            # b=None scale-mult variant
+        scale = jax.random.uniform(ks, (x, y), jnp.float32)
+        kw = {"scale": scale}
+        return (a, xs), kw, coil_lincomb_ref(a, xs, scale=scale)
+    b, ys = _cplx(kb, (x, y)), _cplx(ky, (j, x, y))
+    scale = jax.random.uniform(ks, (x, y), jnp.float32)
+    kw = {"b": b, "y": ys, "scale": scale}
+    return (a, xs), kw, coil_lincomb_ref(a, xs, b, ys, scale)
+
+
+def _plane_samples(i):
+    j, x, y = [(4, 32, 32), (8, 64, 64)][i]
+    kz, km = jax.random.split(jax.random.PRNGKey(330 + i))
+    z = _cplx(kz, (j, x, y))
+    m = jax.random.uniform(km, (x, y), jnp.float32)
+    return (z, m), {}, plane_mult_ref(z, m)
+
+
+def _plane_shape_case(seed, m, y):
+    if m == 0:
+        return None
+    kz, km = jax.random.split(jax.random.PRNGKey(seed))
+    z = _cplx(kz, (3, m, y))
+    mk = jax.random.uniform(km, (m, y), jnp.float32)
+    return (z, mk), {}, plane_mult_ref(z, mk)
+
+
+COIL_FORWARD = kreg.register(KernelSpec(
+    family="coil_mult", name="coil_forward",
+    pallas=coil_forward_pallas, ref=coil_forward_ref, fallback="jnp",
+    block_args=("bx",), default_block=(32,), block_space=_SPACE,
+    supports=lambda block, coils, x, **kw:
+        coils.ndim == 3 and x.ndim == 2 and
+        dim_divisible(coils.shape[1], block[0]) and coils.shape[0] > 0,
+    tol=1e-5, layout=_LAYOUT,
+    samples=_forward_samples, nsamples=2,
+    shape_case=_forward_shape_case,
+))
+
+COIL_ADJOINT = kreg.register(KernelSpec(
+    family="coil_mult", name="coil_adjoint",
+    pallas=coil_adjoint_pallas, ref=coil_adjoint_ref, fallback="jnp",
+    block_args=("bx",), default_block=(32,), block_space=_SPACE,
+    supports=lambda block, coils, z, mask=None, **kw:
+        coils.ndim == 3 and z.ndim == 3 and
+        dim_divisible(coils.shape[1], block[0]) and coils.shape[0] > 0,
+    tol=1e-4, layout=_LAYOUT,
+    samples=_adjoint_samples, nsamples=2,
+    shape_case=_adjoint_shape_case,
+))
+
+COIL_LINCOMB = kreg.register(KernelSpec(
+    family="coil_mult", name="coil_lincomb",
+    pallas=coil_lincomb_pallas, ref=coil_lincomb_ref, fallback="jnp",
+    block_args=("bx",), default_block=(32,), block_space=_SPACE,
+    supports=lambda block, a, x, b=None, y=None, scale=None, **kw:
+        x.ndim == 3 and dim_divisible(x.shape[1], block[0]) and
+        x.shape[0] > 0,
+    tol=1e-5, layout=_LAYOUT,
+    samples=_lincomb_samples, nsamples=2,
+))
+
+PLANE_MULT = kreg.register(KernelSpec(
+    family="coil_mult", name="plane_mult",
+    pallas=plane_mult_pallas, ref=plane_mult_ref, fallback="jnp",
+    block_args=("bx",), default_block=(32,), block_space=_SPACE,
+    supports=lambda block, z, m, **kw:
+        z.ndim == m.ndim + 1 and z.ndim == 3 and
+        dim_divisible(z.shape[1], block[0]) and z.shape[0] > 0,
+    tol=1e-5, layout=_LAYOUT,
+    samples=_plane_samples, nsamples=2,
+    shape_case=_plane_shape_case,
+))
+
+
+def coil_forward(coils, x, impl="auto", block=None):
+    impl, block = COIL_FORWARD.resolve(impl, block, coils, x)
+    if impl != "pallas":
         return coil_forward_ref(coils, x)
-    cr, ci = _split(coils)
-    xr, xi = _split(x)
-    zr, zi = coil_forward_pallas(cr, ci, xr, xi, interpret=not _on_tpu())
+    cr, ci = split(coils)
+    xr, xi = split(x)
+    zr, zi = coil_forward_pallas(cr, ci, xr, xi,
+                                 bx=block[0], interpret=not on_tpu())
     return (zr + 1j * zi).astype(coils.dtype)
 
 
-def coil_lincomb(a, x, b=None, y=None, scale=None, impl="auto"):
+COIL_FORWARD.dispatch = coil_forward
+
+
+def coil_lincomb(a, x, b=None, y=None, scale=None, impl="auto", block=None):
     """out_j = scale * (a * x_j + b * y_j) in one fused pass — the
     generalized coil pointwise chain of NLINV's G/DG (``fov*(rho*c)``,
     ``fov*(drho*c0 + rho0*dc)``) without materialized intermediates."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp":
+    impl, block = COIL_LINCOMB.resolve(impl, block, a, x, b=b, y=y,
+                                       scale=scale)
+    if impl != "pallas":
         return coil_lincomb_ref(a, x, b, y, scale)
     J, X, Y = x.shape
-    ar, ai = _split(jnp.broadcast_to(a, (X, Y)))
-    xr, xi = _split(x)
+    ar, ai = split(jnp.broadcast_to(a, (X, Y)))
+    xr, xi = split(x)
     # scale=None streams a ones plane through the kernel; acceptable
     # because every hot-path caller (G/DG) passes the FOV scale — only
     # b=None is frequent enough to warrant its own kernel variant.
@@ -49,37 +173,44 @@ def coil_lincomb(a, x, b=None, y=None, scale=None, impl="auto"):
         else jnp.asarray(scale, jnp.float32)
     if b is None:
         zr, zi = coil_scale_mult_pallas(ar, ai, xr, xi, s,
-                                        interpret=not _on_tpu())
+                                        bx=block[0], interpret=not on_tpu())
         return (zr + 1j * zi).astype(x.dtype)
-    br, bi = _split(jnp.broadcast_to(b, (X, Y)))
-    yr, yi = _split(y)
+    br, bi = split(jnp.broadcast_to(b, (X, Y)))
+    yr, yi = split(y)
     zr, zi = coil_lincomb_pallas(ar, ai, xr, xi, br, bi, yr, yi, s,
-                                 interpret=not _on_tpu())
+                                 bx=block[0], interpret=not on_tpu())
     return (zr + 1j * zi).astype(x.dtype)
 
 
-def plane_mult(z, m, impl="auto"):
+COIL_LINCOMB.dispatch = coil_lincomb
+
+
+def plane_mult(z, m, impl="auto", block=None):
     """z_j * m: the mask / FOV / Sobolev-weight broadcast multiply as one
     fused pointwise pass over the coil stack."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp" or z.ndim != m.ndim + 1:
+    impl, block = PLANE_MULT.resolve(impl, block, z, m)
+    if impl != "pallas":
         return plane_mult_ref(z, jnp.asarray(m, jnp.float32))
-    zr, zi = _split(z)
+    zr, zi = split(z)
     outr, outi = plane_mult_pallas(zr, zi, jnp.asarray(m, jnp.float32),
-                                   interpret=not _on_tpu())
+                                   bx=block[0], interpret=not on_tpu())
     return (outr + 1j * outi).astype(z.dtype)
 
 
-def coil_adjoint(coils, z, mask=None, impl="auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp":
+PLANE_MULT.dispatch = plane_mult
+
+
+def coil_adjoint(coils, z, mask=None, impl="auto", block=None):
+    impl, block = COIL_ADJOINT.resolve(impl, block, coils, z, mask=mask)
+    if impl != "pallas":
         return coil_adjoint_ref(coils, z, mask)
-    cr, ci = _split(coils)
-    zr, zi = _split(z)
+    cr, ci = split(coils)
+    zr, zi = split(z)
     m = jnp.ones(coils.shape[1:], jnp.float32) if mask is None \
         else jnp.asarray(mask, jnp.float32)
     outr, outi = coil_adjoint_pallas(cr, ci, zr, zi, m,
-                                     interpret=not _on_tpu())
+                                     bx=block[0], interpret=not on_tpu())
     return (outr + 1j * outi).astype(coils.dtype)
+
+
+COIL_ADJOINT.dispatch = coil_adjoint

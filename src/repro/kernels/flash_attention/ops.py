@@ -1,14 +1,16 @@
-"""jit'd public wrapper for flash attention with backend dispatch.
+"""jit'd public wrapper for flash attention with registry dispatch.
 
   impl="pallas"   the TPU Pallas kernel (interpret=True on CPU),
   impl="chunked"  pure-JAX online-softmax over KV blocks (lax.scan) —
                   identical memory behaviour to the kernel (no S^2
                   materialization); the CPU/dry-run path,
   impl="naive"    the O(S^2) oracle (small shapes only),
-  impl="auto"     pallas on TPU, chunked elsewhere.
+  impl="auto"     pallas on TPU (when S/T tile), chunked elsewhere.
 
 The model layer always calls ``flash_attention``/``decode_attention``;
-which backend runs is a deployment decision, not a model change.
+which backend runs is a deployment decision, not a model change.  The
+(bq, bk) tile pair is a registry spec field (autotunable, env-pinnable)
+rather than a constant baked into this wrapper.
 """
 
 from __future__ import annotations
@@ -20,12 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _unroll_default() -> bool:
@@ -35,26 +35,96 @@ def _unroll_default() -> bool:
     return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
 
 
+def _qkv(seed, b, hq, hkv, s, t, d, dtype=jnp.float32):
+    kq, kk, kv_ = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(kq, (b, hq, s, d), dtype),
+            jax.random.normal(kk, (b, hkv, t, d), dtype),
+            jax.random.normal(kv_, (b, hkv, t, d), dtype))
+
+
+def _flash_samples(i):
+    # causal MHA / causal GQA with q_offset / window+softcap /
+    # kv_len+non-causal / bf16 — the coverage the bespoke parity file had
+    if i == 0:
+        args = _qkv(500, 1, 2, 2, 128, 128, 64)
+        kw = {"causal": True}
+    elif i == 1:
+        args = _qkv(501, 2, 4, 2, 128, 256, 64)
+        kw = {"causal": True, "q_offset": 128}
+    elif i == 2:
+        args = _qkv(502, 1, 4, 4, 256, 256, 64)
+        kw = {"causal": True, "window": 64, "softcap": 30.0}
+    elif i == 3:
+        args = _qkv(503, 1, 2, 2, 128, 256, 64)
+        kw = {"causal": False, "kv_len": 200}
+    else:
+        args = _qkv(504, 1, 2, 2, 128, 128, 64, jnp.bfloat16)
+        kw = {"causal": True}
+    tol = 2e-2 if i == 4 else 2e-3
+    return args, kw, attention_ref(*args, **kw), tol
+
+
+def _flash_shape_case(seed, m, y):
+    if m == 0:
+        return None                      # zero-length sequences are invalid
+    d = max(8, min(y, 64))
+    args = _qkv(seed, 1, 2, 2, m, m, d)
+    kw = {"causal": True}
+    return args, kw, attention_ref(*args, **kw)
+
+
+def _block_invariance(seed=0):
+    """Property: the online-softmax result is tile-shape independent —
+    any (bq, bk) in the spec space produces the same output."""
+    args, kw, want, tol = _flash_samples(seed % 2)
+    a = flash_attention(*args, impl="pallas", block=(128, 64), **kw)
+    b = flash_attention(*args, impl="pallas", block=(64, 128), **kw)
+    assert jnp.max(jnp.abs(a.astype(jnp.float32) -
+                           b.astype(jnp.float32))) < 1e-5
+
+
+FLASH = kreg.register(KernelSpec(
+    family="flash_attention", name="flash_attention",
+    pallas=flash_attention_pallas, ref=attention_ref, fallback="chunked",
+    block_args=("bq", "bk"), default_block=(128, 128),
+    block_space=((64, 64), (64, 128), (128, 64), (128, 128),
+                 (128, 256), (256, 128), (256, 256)),
+    supports=lambda block, q, k, v, **kw:
+        dim_divisible(q.shape[2], block[0]) and
+        dim_divisible(k.shape[2], block[1]),
+    tol=2e-3,
+    layout="(B, H, S, D) heads; Q rows x KV cols tiled (bq, bk)",
+    samples=_flash_samples, nsamples=5,
+    shape_case=_flash_shape_case,
+    properties=(_block_invariance,),
+))
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     kv_len=None, q_offset=0, scale=None, impl="auto",
-                    block_q=128, block_k=128):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "chunked"
+                    block_q=None, block_k=None, block=None):
+    if block is None and (block_q is not None or block_k is not None):
+        cur = FLASH.pick_block(None)
+        block = (block_q or cur[0], block_k or cur[1])
+    impl, block = FLASH.resolve(impl, block, q, k, v)
     if impl == "pallas":
         return flash_attention_pallas(
             q, k, v, kv_len, causal=causal, window=window, softcap=softcap,
-            q_offset=q_offset, scale=scale, bq=block_q, bk=block_k,
-            interpret=not _on_tpu())
+            q_offset=q_offset, scale=scale, bq=block[0], bk=block[1],
+            interpret=not on_tpu())
     if impl == "chunked":
         return chunked_attention(q, k, v, causal=causal, window=window,
                                  softcap=softcap, kv_len=kv_len,
                                  q_offset=q_offset, scale=scale,
-                                 block_k=block_k)
+                                 block_k=block[1])
     if impl == "naive":
         return attention_ref(q, k, v, causal=causal, window=window,
                              softcap=softcap, kv_len=kv_len,
                              q_offset=q_offset, scale=scale)
     raise ValueError(impl)
+
+
+FLASH.dispatch = flash_attention
 
 
 def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,

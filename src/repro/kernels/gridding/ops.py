@@ -1,6 +1,10 @@
 """Complex-array wrappers + interpolation-matrix builder for the
-gridding kernels, with backend dispatch (Pallas on TPU, jnp matmul
-elsewhere; both compute the identical separable operator)."""
+gridding kernels, with registry dispatch (Pallas on TPU, jnp matmul
+elsewhere; both compute the identical separable operator).  The specs
+declare the sample-block tiling ``bs`` and link ``grid_adjoint`` to
+``degrid`` as its adjoint; the spec samples check both against the
+independent per-sample gather/scatter oracle in ``ref.py``.
+"""
 
 from __future__ import annotations
 
@@ -8,15 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu, split
 from .kernel import degrid_pallas, grid_pallas
-
-
-def _on_tpu():
-    return jax.default_backend() == "tpu"
-
-
-def _split(x):
-    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+from .ref import degrid_ref, grid_ref
 
 
 def interp_matrices(traj, grid: int, pad_to: int = 128):
@@ -56,28 +55,104 @@ def _grid_jnp(ax, ay, y):
     return jnp.einsum("su,js,sv->juv", ax, y, ay)
 
 
-def degrid(g, ax, ay, impl: str = "auto"):
+def _traj(seed, s, grid):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (s, 2),
+                              jnp.float32, 0.0, float(grid))
+
+
+def _cplx(key, shape):
+    kr, ki = jax.random.split(key)
+    return (jax.random.normal(kr, shape) +
+            1j * jax.random.normal(ki, shape)).astype(jnp.complex64)
+
+
+def _degrid_samples(i):
+    (j, grid, s) = [(2, 16, 200), (3, 32, 640)][i]
+    traj = _traj(400 + i, s, grid)
+    ax, ay = interp_matrices(traj, grid)
+    g = _cplx(jax.random.PRNGKey(410 + i), (j, grid, grid))
+    want = jnp.zeros((j, ax.shape[0]), g.dtype)
+    want = want.at[:, :s].set(degrid_ref(g, traj))
+    return (g, ax, ay), {}, want
+
+
+def _grid_samples(i):
+    (j, grid, s) = [(2, 16, 200), (3, 32, 640)][i]
+    traj = _traj(420 + i, s, grid)
+    ax, ay = interp_matrices(traj, grid)
+    sp = ax.shape[0]
+    y = jnp.zeros((j, sp), jnp.complex64)
+    y = y.at[:, :s].set(_cplx(jax.random.PRNGKey(430 + i), (j, s)))
+    want = grid_ref(y[:, :s], traj, grid)
+    return (y, ax, ay), {}, want
+
+
+def _adjointness(seed=0):
+    """Property: <degrid(g), y> == <g, grid_adjoint(y)> on every impl —
+    the separable matrices really are transposes of each other."""
+    (g, ax, ay), _, _ = _degrid_samples(0)
+    y = _cplx(jax.random.PRNGKey(seed + 440), (g.shape[0], ax.shape[0]))
+    for impl in ("jnp", "pallas"):
+        lhs = jnp.vdot(degrid(g, ax, ay, impl=impl), y)
+        rhs = jnp.vdot(g, grid_adjoint(y, ax, ay, impl=impl))
+        assert jnp.abs(lhs - rhs) / max(1.0, jnp.abs(lhs)) < 1e-4, impl
+
+
+DEGRID = kreg.register(KernelSpec(
+    family="gridding", name="degrid",
+    pallas=degrid_pallas, ref=degrid_ref, fallback="jnp",
+    block_args=("bs",), default_block=(128,),
+    block_space=((64,), (128,), (256,), (512,)),
+    supports=lambda block, g, ax, ay, **kw:
+        g.shape[0] > 0 and dim_divisible(ax.shape[0], block[0]),
+    tol=1e-3,
+    layout="(Sp, grid) separable matrices; samples blocked bs at a time",
+    samples=_degrid_samples, nsamples=2,
+    properties=(_adjointness,),
+))
+
+GRID_ADJOINT = kreg.register(KernelSpec(
+    family="gridding", name="grid_adjoint",
+    pallas=grid_pallas, ref=grid_ref, fallback="jnp",
+    block_args=("bs",), default_block=(128,),
+    block_space=((64,), (128,), (256,), (512,)),
+    supports=lambda block, y, ax, ay, **kw:
+        y.shape[0] > 0 and dim_divisible(ax.shape[0], block[0]),
+    tol=1e-3,
+    layout="(Sp, grid) separable matrices; samples blocked bs at a time",
+    samples=_grid_samples, nsamples=2,
+    adjoint_of="gridding.degrid",
+))
+
+
+def degrid(g, ax, ay, impl: str = "auto", block=None):
     """g: (J, X, Y) complex grid -> (J, Sp) complex samples (padded rows
     read zero)."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
     ax = jnp.asarray(ax)
     ay = jnp.asarray(ay)
-    if impl == "jnp":
+    impl, block = DEGRID.resolve(impl, block, g, ax, ay)
+    if impl != "pallas":
         return _degrid_jnp(ax, ay, g)
-    gr, gi = _split(g)
-    outr, outi = degrid_pallas(ax, ay, gr, gi, interpret=not _on_tpu())
+    gr, gi = split(g)
+    outr, outi = degrid_pallas(ax, ay, gr, gi,
+                               bs=block[0], interpret=not on_tpu())
     return (outr + 1j * outi).astype(g.dtype)
 
 
-def grid_adjoint(y, ax, ay, impl: str = "auto"):
+DEGRID.dispatch = degrid
+
+
+def grid_adjoint(y, ax, ay, impl: str = "auto", block=None):
     """Adjoint: y (J, Sp) complex samples -> (J, X, Y) complex grid."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
     ax = jnp.asarray(ax)
     ay = jnp.asarray(ay)
-    if impl == "jnp":
+    impl, block = GRID_ADJOINT.resolve(impl, block, y, ax, ay)
+    if impl != "pallas":
         return _grid_jnp(ax, ay, y)
-    yr, yi = _split(y)
-    outr, outi = grid_pallas(ax, ay, yr, yi, interpret=not _on_tpu())
+    yr, yi = split(y)
+    outr, outi = grid_pallas(ax, ay, yr, yi,
+                             bs=block[0], interpret=not on_tpu())
     return (outr + 1j * outi).astype(y.dtype)
+
+
+GRID_ADJOINT.dispatch = grid_adjoint

@@ -1,4 +1,4 @@
-"""Wrappers: local fused masked-sum (Pallas/jnp dispatch) and the
+"""Wrappers: local fused masked-sum (registry dispatch) and the
 distributed ``masked_psum_crop`` — the full TPU adaptation of the
 paper's P2P all-reduce: crop to the M_Omega section (4x fewer bytes,
 the grid is doubled), psum over the ICI axis, re-pad."""
@@ -9,25 +9,60 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu
 from .kernel import masked_sum_pallas
 from .ref import masked_sum_ref
 
 
-def _on_tpu():
-    return jax.default_backend() == "tpu"
+def _case(seed, g, x, y):
+    kp, km = jax.random.split(jax.random.PRNGKey(seed))
+    kr, ki = jax.random.split(kp)
+    partials = (jax.random.normal(kr, (g, x, y)) +
+                1j * jax.random.normal(ki, (g, x, y))).astype(jnp.complex64)
+    mask = (jax.random.uniform(km, (x, y)) > 0.4).astype(jnp.float32)
+    return (partials, mask), {}, masked_sum_ref(partials, mask)
 
 
-def masked_sum(partials, mask, impl="auto"):
+def _masked_samples(i):
+    g, x, y = [(4, 32, 32), (2, 96, 128)][i]
+    return _case(800 + i, g, x, y)
+
+
+def _masked_shape_case(seed, m, y):
+    if m == 0:
+        return None
+    return _case(seed, 3, m, y)
+
+
+MASKED_SUM = kreg.register(KernelSpec(
+    family="masked_allreduce", name="masked_sum",
+    pallas=masked_sum_pallas, ref=masked_sum_ref, fallback="jnp",
+    block_args=("bx",), default_block=(32,),
+    block_space=((8,), (16,), (32,), (64,), (128,)),
+    supports=lambda block, partials, mask, **kw:
+        partials.ndim == 3 and partials.shape[0] > 0 and
+        dim_divisible(partials.shape[1], block[0]),
+    tol=1e-4,
+    layout="(G, X, Y) partial stack -> re/im f32, bx-row blocks of X",
+    samples=_masked_samples, nsamples=2,
+    shape_case=_masked_shape_case,
+))
+
+
+def masked_sum(partials, mask, impl="auto", block=None):
     """partials (G, X, Y) complex -> mask * sum_g (local, fused)."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp":
+    impl, block = MASKED_SUM.resolve(impl, block, partials, mask)
+    if impl != "pallas":
         return masked_sum_ref(partials, mask)
     pr = jnp.real(partials).astype(jnp.float32)
     pi = jnp.imag(partials).astype(jnp.float32)
     outr, outi = masked_sum_pallas(pr, pi, jnp.asarray(mask, jnp.float32),
-                                   interpret=not _on_tpu())
+                                   bx=block[0], interpret=not on_tpu())
     return (outr + 1j * outi).astype(partials.dtype)
+
+
+MASKED_SUM.dispatch = masked_sum
 
 
 def masked_psum_crop(x, mask, axis):

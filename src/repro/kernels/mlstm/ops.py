@@ -15,6 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu
+from .kernel import mlstm_pallas
 from .ref import init_state, mlstm_ref
 
 NEG = -1e30
@@ -23,10 +26,6 @@ NEG = -1e30
 def _unroll_default() -> bool:
     # see flash_attention.ops._unroll_default (dry-run cost honesty)
     return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
-
-
-def _on_tpu():
-    return jax.default_backend() == "tpu"
 
 
 def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk=128):
@@ -93,20 +92,66 @@ def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk=128):
     return h.astype(v.dtype), (C, n, m)
 
 
-def mlstm_scan(q, k, v, log_i, log_f, state=None, impl="auto", chunk=None):
-    if chunk is None:
-        chunk = int(os.environ.get("REPRO_MLSTM_CHUNK", "128"))
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "chunkwise"
+def _gated(seed, b, h, s, dk, dv):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, s, dk))
+    k = jax.random.normal(ks[1], (b, h, s, dk))
+    v = jax.random.normal(ks[2], (b, h, s, dv))
+    li = jax.random.normal(ks[3], (b, h, s)) - 1.0
+    lf = -jnp.abs(jax.random.normal(ks[4], (b, h, s))) * 0.1
+    return q, k, v, li, lf
+
+
+def _mlstm_samples(i):
+    b, h, s, dk, dv = [(1, 2, 256, 64, 64), (2, 1, 96, 32, 64)][i]
+    args = _gated(600 + i, b, h, s, dk, dv)
+    return args, {}, mlstm_ref(*args)
+
+
+def _mlstm_shape_case(seed, m, y):
+    if m == 0:
+        return None
+    args = _gated(seed, 1, 2, m, max(8, min(y, 64)), 32)
+    return args, {}, mlstm_ref(*args)
+
+
+MLSTM = kreg.register(KernelSpec(
+    family="mlstm", name="mlstm_scan",
+    pallas=mlstm_pallas, ref=mlstm_ref, fallback="chunkwise",
+    block_args=("chunk",), default_block=(128,),
+    block_space=((32,), (64,), (128,), (256,)),
+    # the kernel starts from zero state only (prior state folds in via
+    # the chunkwise path) and does not pad S
+    supports=lambda block, q, k, v, log_i, log_f, state=None, **kw:
+        state is None and dim_divisible(q.shape[2], block[0]),
+    tol=2e-3,
+    layout="(B, H, S, D) heads; time split into `chunk` MXU chunks",
+    samples=_mlstm_samples, nsamples=2,
+    shape_case=_mlstm_shape_case,
+))
+
+
+def mlstm_scan(q, k, v, log_i, log_f, state=None, impl="auto", chunk=None,
+               block=None):
+    if block is None:
+        env = os.environ.get("REPRO_MLSTM_CHUNK")
+        if chunk is not None:
+            block = (chunk,)
+        elif env is not None:
+            block = (int(env),)
+    impl, block = MLSTM.resolve(impl, block, q, k, v, log_i, log_f,
+                                state=state)
     if impl == "pallas":
-        from .kernel import mlstm_pallas
         return mlstm_pallas(q, k, v, log_i, log_f, state,
-                            chunk=chunk, interpret=not _on_tpu())
+                            chunk=block[0], interpret=not on_tpu())
     if impl == "chunkwise":
-        return mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk=chunk)
+        return mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk=block[0])
     if impl == "ref":
         return mlstm_ref(q, k, v, log_i, log_f, state)
     raise ValueError(impl)
+
+
+MLSTM.dispatch = mlstm_scan
 
 
 def mlstm_step(q, k, v, log_i, log_f, state):

@@ -1,9 +1,12 @@
-"""jit'd wrapper for the RG-LRU scan with backend dispatch.
+"""jit'd wrapper for the RG-LRU scan with registry dispatch.
 
   pallas       TPU kernel (interpret on CPU),
   associative  jax.lax.associative_scan (log-depth; XLA path used on CPU
                and for the dry-run — same FLOP/byte class),
   ref          sequential lax.scan oracle.
+
+The (bb, bw, bs) batch/width/time tile triple lives in the registry
+spec (autotunable), not in this wrapper.
 """
 
 from __future__ import annotations
@@ -11,25 +14,67 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import registry as kreg
+from ..registry import KernelSpec, dim_divisible, on_tpu
 from .kernel import rg_lru_pallas
 from .ref import rg_lru_ref
 
 
-def _on_tpu():
-    return jax.default_backend() == "tpu"
+def _lru_inputs(seed, b, s, w, dtype=jnp.float32):
+    ka, kb, kh = jax.random.split(jax.random.PRNGKey(seed), 3)
+    log_a = -jnp.abs(jax.random.normal(ka, (b, s, w))) * 0.1
+    bb = jax.random.normal(kb, (b, s, w))
+    h0 = jax.random.normal(kh, (b, w))
+    return (log_a.astype(dtype), bb.astype(dtype), h0.astype(dtype))
 
 
-def rg_lru_scan(log_a, b, h0, impl="auto"):
+def _lru_samples(i):
+    if i == 2:  # bf16 coverage (was a bespoke parity case)
+        args = _lru_inputs(702, 2, 256, 128, jnp.bfloat16)
+        return args, {}, rg_lru_ref(*args), 5e-2
+    b, s, w = [(1, 64, 128), (2, 512, 256)][i]
+    args = _lru_inputs(700 + i, b, s, w)
+    return args, {}, rg_lru_ref(*args)
+
+
+def _lru_shape_case(seed, m, y):
+    if m == 0:
+        return None
+    args = _lru_inputs(seed, 2, m, y)
+    return args, {}, rg_lru_ref(*args)
+
+
+RG_LRU = kreg.register(KernelSpec(
+    family="rg_lru", name="rg_lru_scan",
+    pallas=rg_lru_pallas, ref=rg_lru_ref, fallback="associative",
+    block_args=("bb", "bw", "bs"), default_block=(8, 128, 256),
+    block_space=((8, 128, 128), (8, 128, 256), (8, 128, 512),
+                 (4, 128, 256), (8, 256, 256)),
+    supports=lambda block, log_a, b, h0, **kw:
+        dim_divisible(log_a.shape[0], block[0]) and
+        dim_divisible(log_a.shape[2], block[1]) and
+        dim_divisible(log_a.shape[1], block[2]),
+    tol=1e-4,
+    layout="(B, S, W) gated scan; (bb, bs, bw) VMEM tiles, time arbitrary",
+    samples=_lru_samples, nsamples=3,
+    shape_case=_lru_shape_case,
+))
+
+
+def rg_lru_scan(log_a, b, h0, impl="auto", block=None):
     """h_t = exp(log_a_t) h_{t-1} + b_t.  Shapes: (B,S,W), h0 (B,W)."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "associative"
+    impl, block = RG_LRU.resolve(impl, block, log_a, b, h0)
     if impl == "pallas":
-        return rg_lru_pallas(log_a, b, h0, interpret=not _on_tpu())
+        return rg_lru_pallas(log_a, b, h0, bb=block[0], bw=block[1],
+                             bs=block[2], interpret=not on_tpu())
     if impl == "associative":
         return _assoc(log_a, b, h0)
     if impl == "ref":
         return rg_lru_ref(log_a, b, h0)
     raise ValueError(impl)
+
+
+RG_LRU.dispatch = rg_lru_scan
 
 
 def _assoc(log_a, b, h0):

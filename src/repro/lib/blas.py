@@ -31,6 +31,7 @@ from ..core import comm as _comm
 from ..core import compat
 from ..core.comm import _axis_arg
 from ..core.segmented import Policy, SegmentedArray
+from ..kernels import registry as _kreg
 from ..kernels.cg_fused import ops as _cg_ops
 from .plan import Plan, PlanCache, default_cache, seg_token
 
@@ -170,18 +171,27 @@ def cg_update(alpha, p, ap, x, r, cache: PlanCache | None = None):
     xl, _ = _seg_leaves(x, "cg_update")
     rl, rdef = _seg_leaves(r, "cg_update")
     n = len(xl)
+    # resolve (and on TPU, sweep) the row-block choice on the biggest
+    # leaf at plan-build time; the winner is part of the plan identity
+    big = max(pl_, key=lambda l: l.data.size)
+    blocks = _kreg.autotune(
+        "cg_fused.cg_update",
+        sample=lambda: ((jnp.float32(0.5), big.data, big.data,
+                         big.data, big.data), {}),
+        token=("blas", seg_token(big)))
     key = ("blas", "cg_update", tuple(seg_token(l) for l in xl),
-           tuple(seg_token(l) for l in pl_))
+           tuple(seg_token(l) for l in pl_), blocks)
 
     def build():
         def fused(a_, *flat):
             ps, aps = flat[:n], flat[n:2 * n]
             xs, rs = flat[2 * n:3 * n], flat[3 * n:]
-            outs = [_cg_ops.cg_update(a_, p_, ap_, x_, r_)
+            outs = [_cg_ops.cg_update(a_, p_, ap_, x_, r_, block=blocks)
                     for p_, ap_, x_, r_ in zip(ps, aps, xs, rs)]
             return ([o[0] for o in outs], [o[1] for o in outs],
                     sum(o[2] for o in outs))
-        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="cg_update")
+        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="cg_update",
+                    meta={"kernel_blocks": {"cg_fused.cg_update": blocks}})
 
     plan = cache.get_or_build(key, build)
     x2, r2, rs = plan(jnp.asarray(alpha),
@@ -202,16 +212,22 @@ def xpby_dot(x, y, beta, cache: PlanCache | None = None):
     xl, xdef = _seg_leaves(x, "xpby_dot")
     yl, _ = _seg_leaves(y, "xpby_dot")
     n = len(xl)
+    big = max(xl, key=lambda l: l.data.size)
+    blocks = _kreg.autotune(
+        "cg_fused.xpby_dot",
+        sample=lambda: ((big.data, big.data, jnp.float32(0.5)), {}),
+        token=("blas", seg_token(big)))
     key = ("blas", "xpby_dot", tuple(seg_token(l) for l in xl),
-           tuple(seg_token(l) for l in yl))
+           tuple(seg_token(l) for l in yl), blocks)
 
     def build():
         def fused(b_, *flat):
             xs, ys = flat[:n], flat[n:]
-            outs = [_cg_ops.xpby_dot(x_, y_, b_)
+            outs = [_cg_ops.xpby_dot(x_, y_, b_, block=blocks)
                     for x_, y_ in zip(xs, ys)]
             return [o[0] for o in outs], sum(o[1] for o in outs)
-        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="xpby_dot")
+        return Plan(key=key, fn=jax.jit(fused), lib="blas", op="xpby_dot",
+                    meta={"kernel_blocks": {"cg_fused.xpby_dot": blocks}})
 
     plan = cache.get_or_build(key, build)
     w, d = plan(jnp.asarray(beta),

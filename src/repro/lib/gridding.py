@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.segmented import Policy, SegmentedArray
+from ..kernels import registry as _kreg
 from ..kernels.gridding import degrid, grid_adjoint, interp_matrices
 from . import fft as lfft
 from .plan import Plan, PlanCache, default_cache, group_token
@@ -76,6 +77,9 @@ class GriddingPlan:
     ay: jax.Array             # (Sp, Y)
     dcf: jax.Array            # (Sp,) Ram-Lak weights (zero-padded)
     nsamp: int                # true (pre-padding) sample count S
+    blocks: dict = dataclasses.field(default_factory=dict)
+    # autotuned sample-block choices {spec name: (bs,)} — part of the
+    # plan key, so a re-tuned (or pinned) choice is a different plan
 
     @property
     def nsamp_padded(self) -> int:
@@ -94,17 +98,20 @@ class GriddingPlan:
         """Cartesian k-space (J, X, Y) -> trajectory samples (J, Sp).
         Coil-local: a SegmentedArray in means a SegmentedArray out, with
         no communication (each shard samples its own coils)."""
+        blk = self.blocks.get("degrid")
         return self._apply(g, lambda gl: degrid(gl, self.ax, self.ay,
-                                                impl=impl))
+                                                impl=impl, block=blk))
 
     def grid(self, y, impl: str = "auto", density_comp: bool = False):
         """Adjoint: samples (J, Sp) -> Cartesian k-space (J, X, Y).
         ``density_comp`` pre-weights with the Ram-Lak DCF (the adjoint
         reconstruction path)."""
+        blk = self.blocks.get("grid_adjoint")
+
         def fn(yl):
             if density_comp:
                 yl = yl * self.dcf[None]
-            return grid_adjoint(yl, self.ax, self.ay, impl=impl)
+            return grid_adjoint(yl, self.ax, self.ay, impl=impl, block=blk)
         return self._apply(y, fn)
 
     def adjoint_recon(self, y, fov, impl: str = "auto"):
@@ -138,8 +145,27 @@ def plan_gridding(traj, grid: int, *, comm=None,
     cache = default_cache() if cache is None else cache
     t = np.ascontiguousarray(np.asarray(traj, np.float32))
     digest = hashlib.sha1(t.tobytes()).hexdigest()[:16]
-    key = ("gridding", "plan", digest, t.shape[0], int(grid),
-           group_token(comm))
+    grid = int(grid)
+    sp = -(-t.shape[0] // 128) * 128       # interp_matrices' pad_to
+    # block-size choices resolve before the key: a re-tuned or pinned
+    # choice must be a distinct plan (zeros matrices are cost-equivalent
+    # to the real ones for the sweep, and only built if a sweep runs)
+    blocks = {
+        "degrid": _kreg.autotune(
+            "gridding.degrid",
+            sample=lambda: ((jnp.zeros((1, grid, grid), jnp.complex64),
+                             jnp.zeros((sp, grid), jnp.float32),
+                             jnp.zeros((sp, grid), jnp.float32)), {}),
+            token=(sp, grid)),
+        "grid_adjoint": _kreg.autotune(
+            "gridding.grid_adjoint",
+            sample=lambda: ((jnp.zeros((1, sp), jnp.complex64),
+                             jnp.zeros((sp, grid), jnp.float32),
+                             jnp.zeros((sp, grid), jnp.float32)), {}),
+            token=(sp, grid)),
+    }
+    key = ("gridding", "plan", digest, t.shape[0], grid,
+           group_token(comm), tuple(sorted(blocks.items())))
 
     def build():
         ax, ay = interp_matrices(t, grid)
@@ -147,10 +173,11 @@ def plan_gridding(traj, grid: int, *, comm=None,
         dcf[: t.shape[0]] = ramlak_dcf_radial(t, grid)
         ops = GriddingPlan(traj=t, grid_size=grid, ax=jnp.asarray(ax),
                            ay=jnp.asarray(ay), dcf=jnp.asarray(dcf),
-                           nsamp=t.shape[0])
+                           nsamp=t.shape[0], blocks=dict(blocks))
         return Plan(key=key, fn=ops, lib="gridding", op="plan",
                     meta={"nsamp": t.shape[0],
-                          "nsamp_padded": ax.shape[0], "grid": grid})
+                          "nsamp_padded": ax.shape[0], "grid": grid,
+                          "kernel_blocks": dict(blocks)})
 
     plan = cache.get_or_build(key, build)
     return plan.fn

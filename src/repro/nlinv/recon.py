@@ -31,7 +31,12 @@ import numpy as np
 from ..core.env import Communicator, Environment
 from ..core.runtime import DeviceGroup
 from ..core.segmented import Policy
+from ..kernels import registry as _kreg
 from ..lib.plan import Plan, default_cache, group_token
+
+# the kernel families the frame program traces through; their current
+# block choices are part of the frame-plan identity
+_KERNEL_FAMILIES = ("cg_fused", "coil_mult", "masked_allreduce")
 from .irgnm import irgnm, irgnm_fused
 from .operators import make_ops, sobolev_weight, uinit
 
@@ -181,7 +186,8 @@ class Reconstructor:
         one visible plan build (never a silent recompile)."""
         key = ("nlinv", "frame_batched", group_token(self.comm), int(width),
                self.newton, self.cg_iters, self.channel_sum,
-               self.hierarchical, self.fused, self.overlap, bool(donate))
+               self.hierarchical, self.fused, self.overlap, bool(donate),
+               _kreg.choices_token(_KERNEL_FAMILIES))
         return self.plan_cache.get_or_build(
             key, lambda: Plan(key=key, fn=self._build_batched(donate),
                               lib="nlinv", op="frame_batched"))
@@ -192,7 +198,8 @@ class Reconstructor:
         pure cache hits (and the hit/miss counters prove it)."""
         key = ("nlinv", "frame", group_token(self.comm), self.newton,
                self.cg_iters, self.channel_sum, self.hierarchical,
-               self.fused, self.overlap, bool(donate))
+               self.fused, self.overlap, bool(donate),
+               _kreg.choices_token(_KERNEL_FAMILIES))
         return self.plan_cache.get_or_build(
             key, lambda: Plan(key=key, fn=self._build(donate),
                               lib="nlinv", op="frame"))

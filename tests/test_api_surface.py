@@ -267,6 +267,57 @@ def test_serve_scheduler_surface():
         assert got == params, f"Workload.{name}: {got} != {params}"
 
 
+# -- the repro.kernels registry surface (ISSUE 8) ---------------------------
+
+EXPECTED_KERNELSPEC_FIELDS = [
+    "family", "name", "pallas", "ref", "fallback",
+    "block_args", "default_block", "block_space", "supports", "tol",
+    "layout", "samples", "nsamples", "shape_case", "properties",
+    "adjoint_of", "dispatch",
+]
+
+EXPECTED_REGISTRY_SIGNATURES = {
+    "register": ("spec",),
+    "get": ("spec_id",),
+    "specs": ("family",),
+    "get_impl": ("spec_id", "impl"),
+    "autotune": ("spec_id", "sample", "token", "cache", "iters"),
+    "choices": ("family",),
+    "choices_token": ("families",),
+}
+
+# one spec per kernel op: the §4 "porting a kernel is declaring a spec"
+# contract — a new family that bypasses the registry fails this snapshot
+EXPECTED_SPEC_IDS = [
+    "cg_fused.cg_update", "cg_fused.xpby_dot",
+    "coil_mult.coil_adjoint", "coil_mult.coil_forward",
+    "coil_mult.coil_lincomb", "coil_mult.plane_mult",
+    "flash_attention.flash_attention",
+    "gridding.degrid", "gridding.grid_adjoint",
+    "masked_allreduce.masked_sum",
+    "mlstm.mlstm_scan",
+    "rg_lru.rg_lru_scan",
+]
+
+
+def test_kernel_registry_surface():
+    import dataclasses
+
+    from repro.kernels import registry
+    assert [f.name for f in dataclasses.fields(registry.KernelSpec)] == \
+        EXPECTED_KERNELSPEC_FIELDS
+    for name, params in EXPECTED_REGISTRY_SIGNATURES.items():
+        got = _param_names(getattr(registry, name))
+        assert got == params, f"registry.{name}: {got} != {params}"
+    assert registry.PIN_ENV == "REPRO_KERNEL_BLOCKS"
+    assert registry.TUNE_ENV == "REPRO_KERNEL_TUNE"
+
+
+def test_kernel_registry_spec_ids():
+    from repro.kernels import registry
+    assert sorted(s.id for s in registry.specs()) == EXPECTED_SPEC_IDS
+
+
 def test_serve_unified_scheduler():
     """Acceptance row: LM decode and NLINV streaming both run through
     the ONE StreamScheduler — the workloads are Workload subclasses and

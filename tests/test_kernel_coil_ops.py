@@ -1,83 +1,19 @@
-"""coil_mult + masked_allreduce kernels vs oracles (shape/dtype sweeps),
-and their consistency with the NLINV operators they implement."""
+"""coil_mult + masked_allreduce kernels' consistency with the NLINV
+operators they implement.  (Kernel-vs-oracle parity sweeps moved to the
+shared registry harness, ``tests/test_kernel_registry.py``.)"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.coil_mult import (coil_adjoint, coil_adjoint_ref,
-                                     coil_forward, coil_forward_ref,
-                                     coil_lincomb, coil_lincomb_ref,
-                                     plane_mult, plane_mult_ref)
-from repro.kernels.masked_allreduce import masked_sum, masked_sum_ref
+from repro.kernels.coil_mult import coil_adjoint
 
 
 def _cplx(key, shape):
     k1, k2 = jax.random.split(key)
     return (jax.random.normal(k1, shape) +
             1j * jax.random.normal(k2, shape)).astype(jnp.complex64)
-
-
-@pytest.mark.parametrize("J,X,Y", [(2, 32, 32), (5, 64, 128), (8, 128, 64)])
-def test_coil_forward_pallas(J, X, Y):
-    ks = jax.random.split(jax.random.PRNGKey(0), 2)
-    coils, x = _cplx(ks[0], (J, X, Y)), _cplx(ks[1], (X, Y))
-    got = coil_forward(coils, x, impl="pallas")
-    want = coil_forward_ref(coils, x)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=1e-5, rtol=1e-5)
-
-
-@pytest.mark.parametrize("J,X,Y,masked", [(3, 32, 32, True), (6, 64, 64, False),
-                                          (8, 128, 32, True)])
-def test_coil_adjoint_pallas(J, X, Y, masked):
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    coils, z = _cplx(ks[0], (J, X, Y)), _cplx(ks[1], (J, X, Y))
-    mask = (jax.random.uniform(ks[2], (X, Y)) > 0.5).astype(jnp.float32) \
-        if masked else None
-    got = coil_adjoint(coils, z, mask, impl="pallas")
-    want = coil_adjoint_ref(coils, z, mask)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=1e-4, rtol=1e-4)
-
-
-@pytest.mark.parametrize("G,X,Y", [(2, 32, 32), (4, 64, 64), (8, 32, 128)])
-def test_masked_sum_pallas(G, X, Y):
-    ks = jax.random.split(jax.random.PRNGKey(2), 2)
-    partials = _cplx(ks[0], (G, X, Y))
-    mask = (jax.random.uniform(ks[1], (X, Y)) > 0.3).astype(jnp.float32)
-    got = masked_sum(partials, mask, impl="pallas")
-    want = masked_sum_ref(partials, mask)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=1e-5, rtol=1e-5)
-
-
-@pytest.mark.parametrize("J,X,Y,two_term", [(2, 32, 32, True),
-                                            (4, 64, 64, True),
-                                            (3, 32, 128, False)])
-def test_coil_lincomb_pallas(J, X, Y, two_term):
-    """out_j = s*(a*x_j + b*y_j) — the generalized G/DG pointwise chain."""
-    ks = jax.random.split(jax.random.PRNGKey(4), 5)
-    a, x = _cplx(ks[0], (X, Y)), _cplx(ks[1], (J, X, Y))
-    b = _cplx(ks[2], (X, Y)) if two_term else None
-    y = _cplx(ks[3], (J, X, Y)) if two_term else None
-    s = jax.random.uniform(ks[4], (X, Y)).astype(jnp.float32)
-    got = coil_lincomb(a, x, b, y, s, impl="pallas")
-    want = coil_lincomb_ref(a, x, b, y, s)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=1e-4, rtol=1e-4)
-
-
-@pytest.mark.parametrize("J,X,Y", [(2, 32, 32), (6, 64, 64)])
-def test_plane_mult_pallas(J, X, Y):
-    ks = jax.random.split(jax.random.PRNGKey(5), 2)
-    z = _cplx(ks[0], (J, X, Y))
-    m = (jax.random.uniform(ks[1], (X, Y)) > 0.4).astype(jnp.float32)
-    got = plane_mult(z, m, impl="pallas")
-    want = plane_mult_ref(z, m)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=1e-5, rtol=1e-5)
 
 
 def test_lincomb_implements_dg_pointwise_chain():

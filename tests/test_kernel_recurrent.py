@@ -1,12 +1,17 @@
-"""rg_lru and mlstm kernels vs their sequential-scan oracles."""
+"""rg_lru and mlstm decode steps vs their scan oracles.
+
+Kernel-vs-oracle parity sweeps (pallas, associative, chunkwise) live in
+the shared registry harness (``tests/test_kernel_registry.py``, ISSUE
+8); this file keeps the single-step decode recurrences the harness
+can't express — they are separate entry points, not impls of the scan.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.kernels.mlstm import mlstm_chunkwise, mlstm_pallas, mlstm_ref, mlstm_step
-from repro.kernels.rg_lru import rg_lru_pallas, rg_lru_ref, rg_lru_scan, rg_lru_step
+from repro.kernels.mlstm import init_state, mlstm_ref, mlstm_step
+from repro.kernels.rg_lru import rg_lru_ref, rg_lru_step
 
 
 def _lru_inputs(B, S, W, dtype, seed=0):
@@ -16,30 +21,6 @@ def _lru_inputs(B, S, W, dtype, seed=0):
     b = jax.random.normal(ks[1], (B, S, W))
     h0 = jax.random.normal(ks[2], (B, W))
     return log_a.astype(dtype), b.astype(dtype), h0.astype(dtype)
-
-
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("B,S,W", [(1, 64, 128), (2, 256, 128), (4, 128, 256)])
-def test_rg_lru_pallas_vs_ref(B, S, W, dtype):
-    log_a, b, h0 = _lru_inputs(B, S, W, dtype)
-    got_h, got_l = rg_lru_pallas(log_a, b, h0, bb=1, bw=128, bs=64,
-                                 interpret=True)
-    want_h, want_l = rg_lru_ref(log_a, b, h0)
-    tol = 1e-4 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(np.asarray(got_h, np.float32),
-                               np.asarray(want_h, np.float32), atol=tol,
-                               rtol=tol)
-    np.testing.assert_allclose(np.asarray(got_l, np.float32),
-                               np.asarray(want_l, np.float32), atol=tol,
-                               rtol=tol)
-
-
-def test_rg_lru_associative_vs_ref():
-    log_a, b, h0 = _lru_inputs(2, 100, 64, jnp.float32, seed=1)  # ragged S
-    got_h, got_l = rg_lru_scan(log_a, b, h0, impl="associative")
-    want_h, want_l = rg_lru_ref(log_a, b, h0)
-    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
-                               atol=1e-4, rtol=1e-4)
 
 
 def test_rg_lru_step_consistency():
@@ -63,43 +44,10 @@ def _mlstm_inputs(B, H, S, dk, dv, dtype, seed=0):
     return q, k, v, log_i.astype(jnp.float32), log_f.astype(jnp.float32)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
-    (1, 2, 128, 64, 64, 32), (2, 1, 96, 32, 64, 32), (1, 4, 256, 128, 128, 128),
-])
-def test_mlstm_chunkwise_vs_ref(B, H, S, dk, dv, chunk, dtype):
-    q, k, v, li, lf = _mlstm_inputs(B, H, S, dk, dv, dtype)
-    got_h, (gC, gn, gm) = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
-    want_h, (wC, wn, wm) = mlstm_ref(q, k, v, li, lf)
-    tol = 2e-3 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(np.asarray(got_h, np.float32),
-                               np.asarray(want_h, np.float32), atol=tol,
-                               rtol=tol)
-    np.testing.assert_allclose(np.asarray(gm), np.asarray(wm), atol=1e-3)
-    np.testing.assert_allclose(np.asarray(gC), np.asarray(wC), atol=tol,
-                               rtol=tol)
-
-
-@pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
-    (1, 2, 128, 64, 64, 64), (2, 2, 128, 128, 128, 32),
-])
-def test_mlstm_pallas_vs_ref(B, H, S, dk, dv, chunk):
-    q, k, v, li, lf = _mlstm_inputs(B, H, S, dk, dv, jnp.float32, seed=3)
-    got_h, (gC, gn, gm) = mlstm_pallas(q, k, v, li, lf, chunk=chunk,
-                                       interpret=True)
-    want_h, (wC, wn, wm) = mlstm_ref(q, k, v, li, lf)
-    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
-                               atol=2e-3, rtol=2e-3)
-    np.testing.assert_allclose(np.asarray(gC), np.asarray(wC), atol=2e-3,
-                               rtol=2e-3)
-    np.testing.assert_allclose(np.asarray(gm), np.asarray(wm), atol=1e-4)
-
-
 def test_mlstm_step_matches_ref():
     B, H, S, dk, dv = 2, 2, 16, 32, 32
     q, k, v, li, lf = _mlstm_inputs(B, H, S, dk, dv, jnp.float32, seed=4)
     want_h, _ = mlstm_ref(q, k, v, li, lf)
-    from repro.kernels.mlstm import init_state
     st = init_state(B, H, dk, dv)
     for t in range(S):
         h, st = mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],

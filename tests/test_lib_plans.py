@@ -5,7 +5,10 @@
   * plan-cached fft/blas correctness vs the direct math, including the
     fused axpy+dot, dot+allreduce and cg_update/xpby_dot epilogues;
   * the streaming engine's plan-cache report: frame 0 builds, steady
-    state is all hits (4-device run lives in test_gridding.py).
+    state is all hits (4-device run lives in test_gridding.py);
+  * the kernel-registry block autotuner (ISSUE 8): the chosen block is
+    part of the plan identity, the decision itself is plan-cached, and
+    the steady state builds nothing.
 """
 
 import jax.numpy as jnp
@@ -213,6 +216,60 @@ def test_blas_tree_forms_shared_with_nlinv():
                                np.asarray(want["chat"]), atol=1e-6)
     np.testing.assert_allclose(complex(udot(x, y)),
                                complex(lblas.tree_vdot(x, y)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel-registry autotuner determinism (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_cg_plans_embed_autotuned_blocks(monkeypatch):
+    """The resolved (bm,) block choice is part of the cg plan identity
+    (a key element) and surfaced in plan.meta — a changed tuning choice
+    or pin builds a distinct plan instead of silently reusing a stale
+    program."""
+    from repro.kernels import registry as kreg
+    monkeypatch.setenv(kreg.PIN_ENV, "default")
+    kreg.reset_choices()
+    comm = Environment().subgroup(1)
+    cache = PlanCache()
+    mk = lambda s: comm.container(_mk(s))
+    p, ap, x, r = mk(50), mk(51), mk(52), mk(53)
+    lblas.cg_update(0.25, p, ap, x, r, cache=cache)
+    (plan,) = cache._plans.values()
+    blocks = plan.meta["kernel_blocks"]["cg_fused.cg_update"]
+    assert blocks == kreg.get("cg_fused.cg_update").default_block
+    assert blocks in plan.key
+
+
+def test_autotuner_determinism_zero_steady_state_builds(monkeypatch):
+    """Same spec + geometry + pin -> the same cached decision and plan:
+    after the first call, repeats are pure hits in BOTH the tune cache
+    and the plan cache (zero steady-state rebuilds)."""
+    from repro.kernels import registry as kreg
+    from repro.lib.plan import seg_token
+    monkeypatch.setenv(kreg.PIN_ENV, "default")
+    kreg.reset_choices()
+    comm = Environment().subgroup(1)
+    cache = PlanCache()
+    x, y = comm.container(_mk(60)), comm.container(_mk(61))
+
+    before = kreg.tune_cache().snapshot()
+    lblas.xpby_dot(x, y, 0.5, cache=cache)
+    assert kreg.tune_cache().delta(before)["builds"] <= 1
+
+    steady = kreg.tune_cache().snapshot()
+    for beta in (0.5, 0.25, 0.125):
+        lblas.xpby_dot(x, y, beta, cache=cache)
+    d = kreg.tune_cache().delta(steady)
+    assert d["builds"] == 0 and d["hits"] == 3, d
+    assert cache.misses == 1 and cache.hits == 3
+
+    # the decision itself is deterministic: same (spec, token, pin)
+    # always resolves to the same block tuple
+    tok = ("blas", seg_token(x))
+    b1 = kreg.autotune("cg_fused.xpby_dot", token=tok)
+    b2 = kreg.autotune("cg_fused.xpby_dot", token=tok)
+    assert b1 == b2 == kreg.get("cg_fused.xpby_dot").default_block
 
 
 # ---------------------------------------------------------------------------
