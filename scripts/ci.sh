@@ -42,27 +42,52 @@ run_fast() {
     REPRO_KERNEL_BLOCKS=default \
         python -m pytest tests/test_kernel_registry.py -q
 
-    echo "=== docs link-check (relative links in README.md + docs/) ==="
+    echo "=== docs link-and-anchor check (README.md + docs/) ==="
     python - <<'EOF'
 import pathlib, re, sys
+
+def slugs(path):
+    """GitHub heading anchors of a markdown file (slugified, deduped)."""
+    out, seen = set(), {}
+    text = re.sub(r"```.*?```", "", path.read_text(), flags=re.S)
+    for line in text.splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if not m:
+            continue
+        s = re.sub(r"[^\w\- ]", "", m.group(1).strip().lower())
+        s = s.replace(" ", "-")
+        n = seen.get(s, 0)
+        seen[s] = n + 1
+        out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
 bad = []
 for md in [pathlib.Path("README.md"), *sorted(pathlib.Path("docs").glob("*.md"))]:
-    for m in re.finditer(r"\]\(([^)\s#]+)(#[^)]*)?\)", md.read_text()):
-        target = m.group(1)
+    for m in re.finditer(r"\]\(([^)\s#]*)(#[^)\s]*)?\)", md.read_text()):
+        target, anchor = m.group(1), m.group(2)
         if target.startswith(("http://", "https://", "mailto:")):
             continue
-        if not re.fullmatch(r"[A-Za-z0-9_./-]+", target) or set(target) <= {"."}:
+        if target and (not re.fullmatch(r"[A-Za-z0-9_./-]+", target)
+                       or set(target) <= {"."}):
             continue   # code like `invoke_kernel[_all](...)`, not a link
-        if not (md.parent / target).exists():
+        dest = (md.parent / target) if target else md
+        if target and not dest.exists():
             bad.append(f"{md}: broken link -> {target}")
+        elif anchor and dest.suffix == ".md" and \
+                anchor[1:].lower() not in slugs(dest):
+            bad.append(f"{md}: broken anchor -> {target}{anchor}")
 if bad:
     print("\n".join(bad))
     sys.exit(1)
-print("docs links OK")
+print("docs links+anchors OK")
 EOF
 
-    echo "=== doctests (Communicator verbs / SegmentedArray fluent surface) ==="
-    python -m pytest --doctest-modules src/repro/core -q
+    echo "=== doctests (core verbs + lib plans + serve scheduler + task graphs) ==="
+    python -m pytest --doctest-modules \
+        src/repro/core src/repro/lib src/repro/serve src/repro/task -q
+
+    echo "=== doctests (docs/task_graph.md programming guide) ==="
+    python -m pytest --doctest-glob='*.md' docs/task_graph.md -q
 }
 
 run_full() {

@@ -1,0 +1,11 @@
+"""repro — a multi-GPU programming library for real-time applications.
+
+Layers (see docs/architecture.md): ``repro.core`` (segmented containers
++ Environment/Communicator verbs), ``repro.kernels`` (Pallas TPU
+kernels), ``repro.lib`` (plan-cached library ports), ``repro.nlinv``
+(the real-time NLINV workload), ``repro.task`` (dependency-driven
+task-graph executor), ``repro.serve`` (the multi-stream service) and
+``repro.bench`` (scenario registry + artifacts).
+
+Kept import-light: importing ``repro`` pulls no JAX-heavy modules.
+"""

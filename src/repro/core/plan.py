@@ -66,6 +66,13 @@ class Plan:
     wrapper or a verb-layer composite); ``meta`` carries whatever the
     builder wants reports to see (interp matrices' nnz, transfer bytes,
     schedule choice, ...).
+
+    >>> p = Plan(key=("square", 3), fn=lambda x: x ** 2,
+    ...          lib="libdemo", op="square")
+    >>> p(4)                       # calling the plan runs the program
+    16
+    >>> Plan.value(("blocks",), (8, 8))()   # a cached decision
+    (8, 8)
     """
 
     key: tuple
@@ -99,6 +106,18 @@ class PlanCache:
     cumulative; ``snapshot()``/``stats()`` expose them so callers (the
     streaming engine, benchmark rows) can report hit rates and prove the
     steady state builds nothing.
+
+    >>> cache = PlanCache(maxsize=2)
+    >>> build = lambda: Plan(key=("square", 3), fn=lambda x: x ** 2)
+    >>> cache.get_or_build(("square", 3), build)(4)    # miss: builds
+    16
+    >>> cache.get_or_build(("square", 3), build)(5)    # hit: cached fn
+    25
+    >>> s = cache.stats()
+    >>> (s["hits"], s["misses"], s["size"])
+    (1, 1, 1)
+    >>> cache.delta(s)["builds"]     # a steady region builds nothing
+    0
     """
 
     def __init__(self, maxsize: int = 256):

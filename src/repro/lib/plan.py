@@ -6,6 +6,13 @@ programs as plans; ``repro.lib`` cannot be imported from ``repro.core``
 (it would be circular), so the machinery lives below both.  This module
 keeps the historical ``repro.lib.plan`` import path: everything —
 including the shared default cache instance — is the same object.
+
+>>> cache = PlanCache(maxsize=8)          # a private cache
+>>> cache.get_or_build(("demo",),
+...                    lambda: Plan(key=("demo",), fn=lambda: 7))()
+7
+>>> len(cache), cache is default_cache()
+(1, False)
 """
 
 from __future__ import annotations

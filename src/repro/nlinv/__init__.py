@@ -1,7 +1,8 @@
 from . import cg, gridding, irgnm, operators, phantom, recon, stream
 from .recon import Reconstructor
-from .stream import FrameStream, LatencyReport, stream_movie
+from .stream import (FramePipeline, FrameStream, LatencyReport,
+                     stream_movie)
 
 __all__ = ["cg", "gridding", "irgnm", "operators", "phantom", "recon",
-           "stream", "Reconstructor", "FrameStream", "LatencyReport",
-           "stream_movie"]
+           "stream", "Reconstructor", "FramePipeline", "FrameStream",
+           "LatencyReport", "stream_movie"]

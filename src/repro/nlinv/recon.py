@@ -105,7 +105,11 @@ class Reconstructor:
         return self.comm.group
 
     # -- the shard-local frame program (pure jnp + communicator verbs) ----
-    def _frame(self, y, mask, fov, weight, x0, x_ref):
+    def _frame_solve(self, y, mask, fov, weight, x0, x_ref):
+        """Newton/CG stage only: acquisition -> solved ``u``.  The task
+        pipeline (``repro.task``) runs this and ``_frame_image`` as
+        separate graph nodes so the crop/readout of frame ``f-1`` and
+        the solve of frame ``f`` are independently schedulable."""
         crop = self.channel_sum == "crop"
 
         ops = make_ops(mask, fov, weight)
@@ -144,10 +148,20 @@ class Reconstructor:
 
             u = irgnm(ops, y, x0, x_ref, newton=self.newton,
                       cg_iters=self.cg_iters, channel_sum=csum, dot=dot)
+        return u
+
+    def _frame_image(self, mask, fov, weight, u):
+        """Crop/readout stage: solved ``u`` -> displayed image (the
+        root-sum-of-squares channel combination)."""
+        ops = make_ops(mask, fov, weight)
         c = ops.coils(u["chat"])
         rss = self.comm.allreduce_window(jnp.abs(c) ** 2, None,
                                          axis=self.axis, reduce_dim=0)
-        return u, u["rho"] * jnp.sqrt(rss)
+        return u["rho"] * jnp.sqrt(rss)
+
+    def _frame(self, y, mask, fov, weight, x0, x_ref):
+        u = self._frame_solve(y, mask, fov, weight, x0, x_ref)
+        return u, self._frame_image(mask, fov, weight, u)
 
     def _build(self, donate: bool):
         clone = Policy.CLONE
@@ -203,6 +217,46 @@ class Reconstructor:
         return self.plan_cache.get_or_build(
             key, lambda: Plan(key=key, fn=self._build(donate),
                               lib="nlinv", op="frame"))
+
+    # -- staged plans (the task-graph pipeline's nodes) -------------------
+    def _build_solve(self, donate: bool):
+        clone = Policy.CLONE
+        in_pol = (Policy.NATURAL, clone, clone, clone,
+                  U_POLICIES, U_POLICIES)
+        return self.comm.spmd(self._frame_solve, in_policies=in_pol,
+                              out_policies=U_POLICIES, check_vma=False,
+                              donate_argnums=(4, 5) if donate else ())
+
+    def _build_image(self):
+        clone = Policy.CLONE
+        return self.comm.spmd(self._frame_image,
+                              in_policies=(clone, clone, clone,
+                                           U_POLICIES),
+                              out_policies=clone, check_vma=False)
+
+    def _plan_stage(self, stage: str, builder):
+        key = ("nlinv", stage, group_token(self.comm), self.newton,
+               self.cg_iters, self.channel_sum, self.hierarchical,
+               self.fused, self.overlap,
+               _kreg.choices_token(_KERNEL_FAMILIES))
+        return self.plan_cache.get_or_build(
+            key, lambda: Plan(key=key, fn=builder(), lib="nlinv",
+                              op=stage))
+
+    @property
+    def fn_solve(self):
+        """Newton/CG stage of the frame program (``u`` only) — the
+        ``solve`` node of the task-graph pipeline.  Not donated: with
+        several frames in flight the carry of frame ``f-1`` is still a
+        live input of ``damp`` when frame ``f`` dispatches."""
+        return self._plan_stage("frame_solve",
+                                lambda: self._build_solve(False)).fn
+
+    @property
+    def fn_image(self):
+        """Crop/readout stage ``(mask, fov, weight, u) -> image`` — the
+        ``crop`` node of the task-graph pipeline."""
+        return self._plan_stage("frame_image", self._build_image).fn
 
     @property
     def fn(self):

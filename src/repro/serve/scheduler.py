@@ -133,7 +133,24 @@ class StreamScheduler:
     # -- admission --------------------------------------------------------
     def open(self, client: str = "client", **meta) -> Session:
         """Admit (or queue) one new client stream; raises
-        :class:`AdmissionError` when the service is full."""
+        :class:`AdmissionError` when the service is full.
+
+        >>> class Echo(Workload):
+        ...     def open_session(self, session): return {}
+        ...     def step(self, batch, width):
+        ...         return [(item, False) for _, item in batch]
+        >>> sched = StreamScheduler(Echo(), ServeConfig(max_concurrency=1,
+        ...                                             max_queue=1))
+        >>> sched.open("scanner-a").admitted
+        True
+        >>> sched.open("scanner-b").admitted    # queued behind the first
+        False
+        >>> sched.open("scanner-c")
+        Traceback (most recent call last):
+            ...
+        repro.serve.scheduler.AdmissionError: service full: 1 admitted, \
+1 waiting (max_queue=1)
+        """
         if (len(self.sessions) >= self.config.max_concurrency
                 and len(self.waiting) >= self.config.max_queue):
             raise AdmissionError(
@@ -162,7 +179,21 @@ class StreamScheduler:
         """Enqueue one work item (a frame / a decode step).  Returns
         False — the item was SHED — once ``queue_depth`` items are
         already staged: a real-time client must drop frames, not let
-        its latency grow without bound."""
+        its latency grow without bound.
+
+        >>> class Echo(Workload):
+        ...     def open_session(self, session): return {}
+        ...     def step(self, batch, width):
+        ...         return [(item, False) for _, item in batch]
+        >>> sched = StreamScheduler(Echo(), ServeConfig(queue_depth=1))
+        >>> s = sched.open("scanner")
+        >>> sched.submit(s, "frame0")
+        True
+        >>> sched.submit(s, "frame1")   # past queue_depth: shed
+        False
+        >>> s.rejected
+        1
+        """
         if session.done:
             raise RuntimeError(f"submit on closed session {session.sid}")
         if len(session.pending) >= self.config.queue_depth:
@@ -175,7 +206,22 @@ class StreamScheduler:
     # -- the tick ---------------------------------------------------------
     def tick(self) -> int:
         """Admit what fits, batch everything ready, run one Workload
-        step.  Returns the number of items completed."""
+        step.  Returns the number of items completed.
+
+        >>> class Echo(Workload):
+        ...     def open_session(self, session): return {}
+        ...     def step(self, batch, width):
+        ...         return [(item, False) for _, item in batch]
+        >>> sched = StreamScheduler(Echo())
+        >>> a, b = sched.open("a"), sched.open("b")
+        >>> _ = sched.submit(a, 1); _ = sched.submit(b, 2)
+        >>> sched.tick()                # one batched step over both
+        2
+        >>> (a.results, b.results)
+        ([1], [2])
+        >>> sched.tick()                # nothing ready
+        0
+        """
         self._refill()
         ready = [s for _, s in sorted(self.sessions.items()) if s.pending]
         if not ready:

@@ -31,6 +31,7 @@ import numpy as np
 from ..nlinv.operators import sobolev_weight
 from ..nlinv.recon import Reconstructor, pad_channels
 from ..nlinv.stream import upload_frame
+from ..task import Executor, TaskGraph
 from .scheduler import Session, Workload
 
 
@@ -58,6 +59,7 @@ class NlinvStreamWorkload(Workload):
     def __init__(self, rec: Reconstructor, *, damping: float = 0.9):
         self.rec = rec
         self.damping = damping
+        self._exec = Executor()
         self._damp = jax.jit(
             lambda u: jax.tree.map(lambda a: damping * a, u))
         self._geom = None            # (J_padded, grid), pinned by 1st open
@@ -134,14 +136,27 @@ class NlinvStreamWorkload(Workload):
             xb = stack_carries([s.state["x_ref"] for s in rows])
         pads = [item for _, item in batch]
         pads += [pads[-1]] * (width - B)
-        yb = jnp.stack([yd for yd, _ in pads])
-        mb = jnp.stack([md for _, md in pads])
+        # One tick is one task graph: the stack of the already-uploaded
+        # acquisitions is an explicit copy edge into the batched solve,
+        # and the fence happens once, at the executor's sinks, instead
+        # of an ad-hoc block on the image batch.
+        g = TaskGraph()
+        g.copy("stack",
+               lambda: (jnp.stack([yd for yd, _ in pads]),
+                        jnp.stack([md for _, md in pads])),
+               outputs=("yb", "mb"))
         # the stacked carry is replaced every tick, so its two largest
         # buffers are donated to the launch (as in FrameStream)
-        fn = self.rec.fn_batched(width, donate=True)
-        ub, imgb = fn(yb, mb, self._fov_d, self._w_d, ub, xb)
-        xb = self._damp(ub)
-        imgb.block_until_ready()
+        g.add("solve", self.rec.fn_batched(width, donate=True),
+              inputs=("yb", "mb", "fov", "weight", "u_prev", "xref_prev"),
+              outputs=("u", "img"), group=self.rec.comm)
+        g.add("damp", self._damp, inputs=("u",), outputs=("xref",),
+              group=self.rec.comm)
+        vals = self._exec.run(
+            g, feeds={"fov": self._fov_d, "weight": self._w_d,
+                      "u_prev": ub, "xref_prev": xb},
+            outputs=("u", "xref", "img"))
+        ub, xb, imgb = vals["u"], vals["xref"], vals["img"]
         self._stack = (sids + (sids[-1],) * (width - B), ub, xb)
         self._by_sid = {s.sid: s for s in sessions}
         # NLINV streams are long-lived: never done from inside a tick

@@ -1,0 +1,20 @@
+"""``repro.task`` — dependency-driven task graphs for frame pipelining.
+
+Declare device work as :class:`Task` nodes (inputs/outputs by name,
+placement hint, explicit ``copy`` transfer edges) in a
+:class:`TaskGraph`; run it with :class:`Executor` (topological async
+dispatch, fences only at sinks) or stream per-frame graphs through a
+:class:`Pipeline` with a bounded in-flight window.  The programming
+guide is ``docs/task_graph.md``; the NLINV frame program rides it in
+``repro.nlinv.stream.FramePipeline``.
+"""
+
+from .executor import Executor, Pipeline, TaskRun
+from .graph import (CrossGroupError, CycleError, Task, TaskError,
+                    TaskGraph, placement_token)
+
+__all__ = [
+    "Task", "TaskGraph", "TaskError", "CycleError", "CrossGroupError",
+    "placement_token",
+    "Executor", "Pipeline", "TaskRun",
+]

@@ -267,6 +267,56 @@ def test_serve_scheduler_surface():
         assert got == params, f"Workload.{name}: {got} != {params}"
 
 
+# -- the repro.task task-graph surface (ISSUE 9) ----------------------------
+
+EXPECTED_TASK_ALL = [
+    "Task", "TaskGraph", "TaskError", "CycleError", "CrossGroupError",
+    "placement_token",
+    "Executor", "Pipeline", "TaskRun",
+]
+
+# the contract docs/task_graph.md codes against
+EXPECTED_TASK_SIGNATURES = {
+    "TaskGraph.add": ("self", "name", "fn", "inputs", "outputs", "group",
+                      "kind"),
+    "TaskGraph.copy": ("self", "name", "fn", "inputs", "outputs", "group"),
+    "TaskGraph.validate": ("self", "feeds"),
+    "TaskGraph.toposort": ("self", "feeds", "_validate"),
+    "Executor.run": ("self", "graph", "feeds", "outputs", "fence"),
+    "Pipeline.push": ("self", "graph", "feeds", "tag", "outputs"),
+    "Pipeline.flush": ("self",),
+}
+
+
+def test_task_all_snapshot():
+    import repro.task as task
+    assert list(task.__all__) == EXPECTED_TASK_ALL
+    for name in EXPECTED_TASK_ALL:
+        assert hasattr(task, name), f"__all__ names missing attr {name}"
+
+
+def test_task_signatures():
+    import repro.task as task
+    for path, params in EXPECTED_TASK_SIGNATURES.items():
+        cls, meth = path.split(".")
+        got = _param_names(getattr(getattr(task, cls), meth))
+        assert got == params, f"repro.task.{path}: {got} != {params}"
+
+
+def test_task_error_hierarchy():
+    from repro.task import CrossGroupError, CycleError, TaskError
+    assert issubclass(CycleError, TaskError)
+    assert issubclass(CrossGroupError, TaskError)
+    assert issubclass(TaskError, RuntimeError)
+
+
+def test_stream_engines_share_contract():
+    """FramePipeline is a drop-in for FrameStream: same run signature,
+    same LatencyReport artifact."""
+    from repro.nlinv.stream import FramePipeline, FrameStream
+    assert _param_names(FramePipeline.run) == _param_names(FrameStream.run)
+
+
 # -- the repro.kernels registry surface (ISSUE 8) ---------------------------
 
 EXPECTED_KERNELSPEC_FIELDS = [
