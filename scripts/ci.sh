@@ -5,6 +5,8 @@
 #   scripts/ci.sh fast         # public-API snapshot + kernel-registry
 #                              #   harness (CPU) + docs link-check
 #                              #   + doctests (fails on drift)
+#                              #   + chaos suite (fault injection under
+#                              #   the pinned REPRO_FAULT_SEED)
 #   scripts/ci.sh full         # tier-1 pytest, twice: on the host's single
 #                              #   default device AND under 4 simulated host
 #                              #   devices (real multi-device mesh ambient;
@@ -82,12 +84,20 @@ if bad:
 print("docs links+anchors OK")
 EOF
 
-    echo "=== doctests (core verbs + lib plans + serve scheduler + task graphs) ==="
+    echo "=== doctests (core verbs + lib plans + serve scheduler + task graphs + ft) ==="
     python -m pytest --doctest-modules \
-        src/repro/core src/repro/lib src/repro/serve src/repro/task -q
+        src/repro/core src/repro/lib src/repro/serve src/repro/task \
+        src/repro/ft -q
 
-    echo "=== doctests (docs/task_graph.md programming guide) ==="
-    python -m pytest --doctest-glob='*.md' docs/task_graph.md -q
+    echo "=== doctests (docs/task_graph.md + docs/fault_tolerance.md guides) ==="
+    python -m pytest --doctest-glob='*.md' docs/task_graph.md \
+        docs/fault_tolerance.md -q
+
+    echo "=== chaos suite (fault injection, pinned seed) ==="
+    # the injection schedule is a pure function of the seed, so the
+    # chaos runs are as deterministic as the rest of the suite
+    REPRO_FAULT_SEED=1234 \
+        python -m pytest tests/test_fault_injection.py -q
 }
 
 run_full() {

@@ -58,6 +58,10 @@ class Comparison:
     # threshold — a scheduler change that keeps the mean tick fast but
     # starves one client fails here, not silently
     p95_regressions: list = dataclasses.field(default_factory=list)
+    # scenarios flagged ``extra.advisory`` in either artifact: evidence
+    # columns only (e.g. the chaos drill's recovery latency), excluded
+    # from both the steady-state and the p95 gates by construction
+    advisory: list = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -84,6 +88,12 @@ def compare_artifacts(base: dict, new: dict, *,
             continue
         if key not in b:
             cmp.new.append(key)
+            continue
+        if (b[key].get("extra") or {}).get("advisory") \
+                or (n[key].get("extra") or {}).get("advisory"):
+            # a fault-injection drill's timings measure the injected
+            # faults, not the code: report, never gate
+            cmp.advisory.append(key)
             continue
         bs = b[key]["steady_ms"]
         ns = round(n[key]["steady_ms"] * scale, 6)
@@ -161,6 +171,8 @@ def format_report(cmp: Comparison) -> str:
         lines.append(f"  new        {key}")
     for key in cmp.missing:
         lines.append(f"  MISSING    {key} (in base, not in new)")
+    for key in cmp.advisory:
+        lines.append(f"  advisory   {key} (not gated)")
     for entry in cmp.non_monotone:
         curve = " -> ".join(f"{v:g} ({d})"
                             for d, v in entry["speedups"].items())
@@ -169,7 +181,7 @@ def format_report(cmp: Comparison) -> str:
         f"  {len(cmp.unchanged)} unchanged, "
         f"{len(cmp.below_floor)} under the noise floor, "
         f"{len(cmp.improvements)} improved, {len(cmp.new)} new, "
-        f"{len(cmp.missing)} missing, "
+        f"{len(cmp.missing)} missing, {len(cmp.advisory)} advisory, "
         f"{len(cmp.non_monotone)} non-monotone scaling, "
         f"{len(cmp.regressions)} regressions, "
         f"{len(cmp.p95_regressions)} per-client p95 regressions")
@@ -203,6 +215,8 @@ def format_markdown(cmp: Comparison) -> str:
         lines.append(f"| `{key}` | — | — | — | 🆕 new |")
     for key in cmp.missing:
         lines.append(f"| `{key}` | — | — | — | ⚠️ missing |")
+    for key in cmp.advisory:
+        lines.append(f"| `{key}` | — | — | — | advisory (not gated) |")
     if cmp.p95_regressions:
         lines += ["", "**Per-client p95 regressions** (serve scenarios, "
                       "worst client):", ""]

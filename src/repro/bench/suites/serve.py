@@ -15,9 +15,11 @@ bitwise-comparable; the batched program is the vmapped same math).
 from __future__ import annotations
 
 import json
+import os
 
 import numpy as np
 
+from ...ft import FaultInjector, FaultSpec, RestartPolicy
 from ...lib.plan import default_cache
 from ...nlinv import phantom
 from ...nlinv.recon import Reconstructor
@@ -90,6 +92,73 @@ def multi_stream(ctx):
         "extra": {"clients": p["clients"], "frames": agg["frames"],
                   "ticks": agg["ticks"], "agg_fps": agg["fps"],
                   "client_p95_ms": client_p95, "artifact": name},
+    }
+
+
+@scenario("serve", "chaos")
+def chaos(ctx):
+    """Serving under seed-scheduled fault injection (ADVISORY — not
+    regression-gated, ``extra.advisory`` tells the comparator so): K
+    clients stream while the injector fires a transient solve failure
+    (absorbed by task retry), poisons one client's tick items (absorbed
+    by quarantine), and straggles the step (feeds the deadline ladder).
+    Evidence columns: recovery latency of the faulted ticks and the
+    aggregate frames/sec the degraded service still delivers."""
+    p = PARAMS[ctx.size]
+    datas = _datasets(p)
+    seed = int(os.environ.get("REPRO_FAULT_SEED", "1234"))
+    rec = Reconstructor(ctx.comm, newton=p["newton"], cg_iters=p["cg"],
+                        channel_sum="crop")
+    wl = NlinvStreamWorkload(rec, damping=0.9,
+                             retry=RestartPolicy(max_restarts=2,
+                                                 backoff_s=0.0))
+    sched = StreamScheduler(wl, ServeConfig(
+        max_concurrency=2 * p["clients"], buckets=(1, 2, 4, 8),
+        deadline_ms=10_000.0, breach_ticks=2, recover_ticks=2))
+    sessions = [sched.open(client=f"client{k}", grid=d["grid"],
+                           ncoils=p["J"], fov=d["fov"])
+                for k, d in enumerate(datas)]
+    specs = [
+        FaultSpec(site="task", kind="transient", match="solve", at=(1,),
+                  max_fires=1),
+        FaultSpec(site="step", kind="corrupt", at=(2,), pick=1,
+                  max_fires=1),
+        FaultSpec(site="step", kind="straggle", at=(3,), delay_ms=2.0),
+    ]
+    with FaultInjector(specs, seed=seed) as inj:
+        for f in range(p["frames"]):
+            for k, d in enumerate(datas):
+                sched.submit(sessions[k], (d["y"][f], d["masks"][f]))
+            while sched.tick() == 0 and \
+                    any(s.pending for s in sched.sessions.values()):
+                pass    # transient tick: retry until the batch lands
+    rep = sched.report()
+    ft = rep["aggregate"]["ft"]
+    ticks = sched.tick_ms
+    steady = ticks[1:] if len(ticks) > 1 else ticks
+    # recovery latency: the faulted ticks' cost over the clean floor
+    floor = min(steady)
+    faulted = [round(t - floor, 3) for t in steady if t > floor]
+    name = f"serve_chaos_d{ctx.devices}_{ctx.size}.json"
+    (ctx.out_dir / name).parent.mkdir(parents=True, exist_ok=True)
+    (ctx.out_dir / name).write_text(json.dumps(rep, indent=2) + "\n")
+    return {
+        "wall_ms": round(float(sum(ticks)), 3),
+        "compile_ms": round(ticks[0], 3),
+        "steady_ms": round(floor, 3),
+        "extra": {
+            "advisory": True,
+            "seed": seed,
+            "fired": [list(f) for f in inj.fired],
+            "step_faults": ft["step_faults"],
+            "retried_tasks": ft["retried_tasks"],
+            "quarantined": ft["quarantined"],
+            "rejected_poisoned": ft["rejected_poisoned"],
+            "degradation_events": ft["degradation_events"],
+            "recovery_ms_max": max(faulted, default=0.0),
+            "degraded_fps": rep["aggregate"]["fps"],
+            "artifact": name,
+        },
     }
 
 

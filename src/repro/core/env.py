@@ -46,6 +46,19 @@ from . import sync as _sync
 from .runtime import DCN_AXES, DeviceGroup
 from .segmented import Policy, SegmentedArray
 
+# Fault-injection hook on verb dispatch (``repro.ft.inject`` installs
+# it; core itself never imports ft).  Called as ``payload =
+# VERB_HOOK(verb_name, payload)`` at the entry of every payload-carrying
+# verb: it may return the payload (possibly corrupted), sleep (a
+# straggling link) or raise (a transient transfer failure / device
+# loss).  ``None`` (the default) costs one attribute read per call.
+VERB_HOOK = None
+
+
+def _fire_verb(name, payload):
+    hook = VERB_HOOK
+    return payload if hook is None else hook(name, payload)
+
 
 class Environment:
     """Device discovery + topology classification (MGPU ``environment``).
@@ -109,6 +122,33 @@ class Environment:
         """Wrap an existing named-axis mesh."""
         return Communicator(DeviceGroup(mesh))
 
+    def survivor(self, comm: "Communicator", lost=()) -> "Communicator":
+        """Mint a Communicator over ``comm``'s devices minus the
+        unhealthy ones (the elastic-remesh step after a device loss).
+
+        ``lost`` holds group-local device indices (or ``jax.Device``
+        objects).  1-D groups only — the survivor of a multi-axis mesh
+        has no canonical shape.  Live carries move over with
+        ``repro.ft.migrate_carry``.
+
+        >>> from repro.core import Environment
+        >>> env = Environment()
+        >>> env.survivor(env.subgroup(1)).size     # nobody lost
+        1
+        """
+        if len(comm.mesh_axes) > 1:
+            raise ValueError(
+                f"survivor() supports 1-D groups; got axes "
+                f"{comm.mesh_axes}")
+        devs = list(comm.mesh.devices.flat)
+        gone = {devs[d] if isinstance(d, int) else d for d in lost}
+        keep = [d for d in devs if d not in gone]
+        if not keep:
+            raise ValueError("no surviving devices in the group")
+        mesh = compat.make_mesh((len(keep),), tuple(comm.mesh_axes),
+                                devices=keep)
+        return Communicator(DeviceGroup(mesh), comm.mesh_axes)
+
 
 @dataclasses.dataclass(frozen=True)
 class Communicator:
@@ -171,6 +211,7 @@ class Communicator:
         >>> (seg.policy, seg.dim, seg.global_shape)
         (<Policy.NATURAL: 'natural'>, 0, (2, 2))
         """
+        x = _fire_verb("container", x)
         return _segmented.segment(x, self.group, policy=policy, dim=dim,
                                   mesh_axes=self.mesh_axes, block=block,
                                   halo=halo)
@@ -190,6 +231,7 @@ class Communicator:
         >>> comm.bcast([1., 2., 3.]).policy
         <Policy.CLONE: 'clone'>
         """
+        x = _fire_verb("bcast", x)
         return _comm.broadcast(x, self.group, mesh_axes=self.mesh_axes)
 
     def scatter(self, x, *, policy: Policy = Policy.NATURAL, dim: int = 0,
@@ -202,8 +244,10 @@ class Communicator:
         >>> comm.scatter([[1., 2.], [3., 4.]], dim=1).seg_len(0)
         2
         """
-        return self.container(x, policy=policy, dim=dim, block=block,
-                              halo=halo)
+        x = _fire_verb("scatter", x)
+        return _segmented.segment(x, self.group, policy=policy, dim=dim,
+                                  mesh_axes=self.mesh_axes, block=block,
+                                  halo=halo)
 
     def gather(self, seg: SegmentedArray) -> jax.Array:
         """Materialize the logical array of a container (Fig. 3).
@@ -213,6 +257,7 @@ class Communicator:
         >>> comm.gather(comm.container([1., 2., 3.])).tolist()
         [1.0, 2.0, 3.0]
         """
+        seg = _fire_verb("gather", seg)
         return _segmented.gather(seg)
 
     def _check_local_axis(self, axis, verb: str):
@@ -264,6 +309,7 @@ class Communicator:
         (<Policy.CLONE: 'clone'>, [4.0, 6.0])
         """
         if isinstance(x, SegmentedArray):
+            x = _fire_verb("allreduce", x)
             return _comm.all_reduce(x, op, hierarchical=hierarchical,
                                     p2p=p2p)
         self._check_local_axis(axis, "allreduce")
@@ -393,6 +439,7 @@ class Communicator:
         >>> comm.copy(seg, policy=Policy.CLONE).policy
         <Policy.CLONE: 'clone'>
         """
+        seg = _fire_verb("copy", seg)
         return _comm.copy(seg, policy=policy, **kw)
 
     # -- point-to-point (the paper's P2P transfer path) -------------------

@@ -1,5 +1,15 @@
+"""Fault tolerance: the offline restart envelope (``failures``), the
+serving-path chaos plane (``inject``) and elastic remesh (``remesh``).
+See ``docs/fault_tolerance.md`` for the programming guide."""
+
 from .failures import (PreemptionGuard, RestartPolicy, StragglerWatchdog,
                        resume_or_init, run_with_restarts)
+from .inject import (DeviceLossFault, FaultError, FaultInjector, FaultSpec,
+                     TransientFault, poison)
+from .remesh import migrate_carry, pad_rows
 
 __all__ = ["PreemptionGuard", "RestartPolicy", "StragglerWatchdog",
-           "resume_or_init", "run_with_restarts"]
+           "resume_or_init", "run_with_restarts",
+           "DeviceLossFault", "FaultError", "FaultInjector", "FaultSpec",
+           "TransientFault", "poison",
+           "migrate_carry", "pad_rows"]

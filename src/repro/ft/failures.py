@@ -25,7 +25,7 @@ class RestartPolicy:
 
 
 def run_with_restarts(train_loop: Callable[[int], int], *,
-                      policy: RestartPolicy = RestartPolicy(),
+                      policy: Optional[RestartPolicy] = None,
                       on_restart: Optional[Callable[[int, Exception], None]]
                       = None) -> int:
     """``train_loop(start_step) -> final_step``; re-enter after failures.
@@ -33,6 +33,10 @@ def run_with_restarts(train_loop: Callable[[int], int], *,
     The loop is responsible for reloading state from the checkpoint dir
     (resume_or_init) — this wrapper only supplies the retry envelope.
     """
+    # a fresh default per call: RestartPolicy is a mutable dataclass, so
+    # a default instance in the signature would be shared (and mutable)
+    # across every call site in the process
+    policy = RestartPolicy() if policy is None else policy
     restarts = 0
     backoff = policy.backoff_s
     last_step = 0

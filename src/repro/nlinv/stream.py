@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..lib.plan import default_cache
-from ..task import Pipeline, TaskGraph
+from ..task import Executor, Pipeline, TaskGraph
 from .operators import sobolev_weight
 from .recon import Reconstructor, pad_channels
 
@@ -119,19 +119,31 @@ class LatencyReport:
     # misses; frame 0 pays them all, steady-state frames must show 0)
     frame_plan_builds: list[int] = dataclasses.field(default_factory=list)
     plan_stats: dict = dataclasses.field(default_factory=dict)
+    # frames the pipeline DROPPED (dispatch failure under
+    # ``drop_failed``): frozen in the movie, excluded from the latency
+    # statistics — a dropped frame has no latency, it has an error
+    dropped: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
-        """First frame pays compilation; steady-state stats exclude it."""
-        steady = self.frame_ms[1:] if len(self.frame_ms) > 1 else self.frame_ms
+        """First frame pays compilation; steady-state stats exclude it
+        (and dropped frames, which never completed)."""
+        gone = set(self.dropped)
+        completed = [t for i, t in enumerate(self.frame_ms)
+                     if i not in gone]
+        if not completed:
+            completed = [0.0]
+        steady = completed[1:] if len(completed) > 1 else completed
         out = {
             "frames": len(self.frame_ms),
             "devices": self.devices,
             "grid": self.grid,
             "ncoils": self.ncoils,
-            "first_frame_ms": round(self.frame_ms[0], 3),
+            "first_frame_ms": round(completed[0], 3),
             **latency_stats(steady),
             "frame_ms": [round(t, 3) for t in self.frame_ms],
         }
+        if self.dropped:
+            out["dropped"] = list(self.dropped)
         if self.frame_plan_builds:
             out["plan_cache"] = dict(
                 self.plan_stats,
@@ -154,15 +166,19 @@ class FrameStream:
         self.recon = recon
         self.damping = damping
         self.donate_carry = donate_carry
+        self.last_carry = None      # {"u", "x_ref"} after run() (fenced)
         self._damp = jax.jit(
             lambda u: jax.tree.map(lambda a: damping * a, u))
 
-    def run(self, y, masks, fov, *, weight=None,
+    def run(self, y, masks, fov, *, weight=None, carry=None,
             report_path=None) -> tuple[jax.Array, LatencyReport]:
         """Reconstruct a movie: y (F, J, X, Y), masks (F, X, Y).
 
         Returns (images (F, X, Y), LatencyReport).  Writes the report
-        artifact to ``report_path`` when given.
+        artifact to ``report_path`` when given.  ``carry`` resumes from
+        a previous run's ``last_carry`` (checkpoint restore / elastic
+        continuation) instead of a cold ``init_carry``; with
+        ``donate_carry`` the passed-in buffers are donated to frame 0.
         """
         rec = self.recon
         y = np.asarray(y)
@@ -175,10 +191,13 @@ class FrameStream:
 
         fov_d = rec.put_const(np.asarray(fov))
         w_d = rec.put_const(np.asarray(weight))
-        u = rec.init_carry(J, g)
-        # x_ref starts equal to u but must be a distinct buffer: both are
-        # donated to the solver every frame.
-        x_ref = jax.tree.map(lambda a: a + 0, u)
+        if carry is None:
+            u = rec.init_carry(J, g)
+            # x_ref starts equal to u but must be a distinct buffer:
+            # both are donated to the solver every frame.
+            x_ref = jax.tree.map(lambda a: a + 0, u)
+        else:
+            u, x_ref = carry["u"], carry["x_ref"]
         fn = rec.fn_donate_carry if self.donate_carry else rec.fn
 
         cache = getattr(rec, "plan_cache", default_cache())
@@ -204,6 +223,8 @@ class FrameStream:
             frame_builds.append(cache.builds - builds0)
             images.append(img)
 
+        self.last_carry = jax.block_until_ready(
+            {"u": u, "x_ref": x_ref})
         # report per-RUN counter deltas, not the process-global
         # cumulative stats — the artifact must describe this stream.
         run = cache.delta(run_start)
@@ -264,17 +285,28 @@ class FramePipeline:
     ``frame_ms`` in the report is completion-to-completion time (the
     throughput view): with several frames in flight a per-frame
     dispatch-to-ready latency would double-count overlapped work.
+
+    Fault tolerance: ``retry`` (a ``repro.ft.RestartPolicy``) arms the
+    executor's transient-task retry; ``drop_failed=True`` turns a frame
+    whose dispatch still fails into a DROP instead of a crash — the
+    movie freezes on the last good image for that index, the carry
+    keeps pointing at the last good frame (temporal regularization
+    continues from it), and ``report.dropped`` lists the indices.  A
+    real-time consumer prefers a repeated frame over a dead stream.
     """
 
     def __init__(self, recon: Reconstructor, *, damping: float = 0.9,
-                 inflight: int = 2):
+                 inflight: int = 2, retry=None, drop_failed: bool = False):
         self.recon = recon
         self.damping = damping
         self.inflight = inflight
+        self.retry = retry
+        self.drop_failed = drop_failed
+        self.last_carry = None      # {"u", "x_ref"} after run() (fenced)
         self._damp = jax.jit(
             lambda u: jax.tree.map(lambda a: damping * a, u))
 
-    def run(self, y, masks, fov, *, weight=None,
+    def run(self, y, masks, fov, *, weight=None, carry=None,
             report_path=None) -> tuple[jax.Array, LatencyReport]:
         rec = self.recon
         y = np.asarray(y)
@@ -287,14 +319,19 @@ class FramePipeline:
 
         fov_d = rec.put_const(np.asarray(fov))
         w_d = rec.put_const(np.asarray(weight))
-        u = rec.init_carry(J, g)
-        x_ref = jax.tree.map(lambda a: a + 0, u)
+        if carry is None:
+            u = rec.init_carry(J, g)
+            x_ref = jax.tree.map(lambda a: a + 0, u)
+        else:
+            u, x_ref = carry["u"], carry["x_ref"]
 
         cache = getattr(rec, "plan_cache", default_cache())
         run_start = cache.snapshot()
         buf = DoubleBuffer(lambda f: upload_frame(rec, y[f], masks[f]))
         buf.stage(0)
-        pipe = Pipeline(inflight=self.inflight)
+        pipe = Pipeline(Executor(retry=self.retry),
+                        inflight=self.inflight,
+                        drop_failed=self.drop_failed)
         images: dict[int, jax.Array] = {}
         frame_ms = [0.0] * F
         frame_builds = [0] * F
@@ -325,16 +362,44 @@ class FramePipeline:
                        "u_prev": prev["u"], "xref_prev": prev["xref"]},
                 tag=f, outputs=("u", "xref", "img"))
             frame_builds[f] = cache.builds - builds0
+            if vals is None:
+                # frame f dropped (drop_failed): the fault may have hit
+                # before or after the upload node ran, so resync the
+                # double buffer to hold exactly frame f+1's acquisition;
+                # prev still points at the last good carry — the next
+                # solve regularizes against the last delivered frame
+                if buf.ready:
+                    buf.take()
+                if f + 1 < F:
+                    buf.stage(f + 1)
+                continue
             prev = {"u": vals["u"], "xref": vals["xref"]}
             retire(done)
         retire(pipe.flush())
+        self.last_carry = jax.block_until_ready(
+            {"u": prev["u"], "x_ref": prev["xref"]})
+
+        dropped = [f for f, _ in pipe.dropped]
+        if len(dropped) == F:
+            raise RuntimeError(
+                f"every frame dropped ({F} dispatch failures) — "
+                f"nothing to freeze on; first: {pipe.dropped[0][1]!r}")
+        # freeze-frame: a dropped index repeats the last delivered
+        # image (leading drops repeat zeros — no frame shipped yet)
+        shaped = next(img for f, img in sorted(images.items()))
+        prev_img = jnp.zeros_like(shaped)
+        movie = []
+        for f in range(F):
+            prev_img = images.get(f, prev_img)
+            movie.append(prev_img)
 
         report = LatencyReport(frame_ms, rec.comm.size, g, J,
                                frame_plan_builds=frame_builds,
-                               plan_stats=cache.delta(run_start))
+                               plan_stats=cache.delta(run_start),
+                               dropped=dropped)
         if report_path is not None:
             report.save(report_path)
-        return jnp.stack([images[f] for f in range(F)]), report
+        return jnp.stack(movie), report
 
 
 def stream_movie(data, *, comm=None, newton=7, cg_iters=30, damping=0.9,

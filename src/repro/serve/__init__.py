@@ -8,15 +8,15 @@ is the LM front door kept API-compatible with the pre-scheduler engine.
 """
 
 from .engine import Engine, Request, make_serve_steps
-from .scheduler import (AdmissionError, ServeConfig, Session,
+from .scheduler import (AdmissionError, Rejected, ServeConfig, Session,
                         StreamScheduler, Workload)
 from .workloads import (LMDecodeWorkload, NlinvStreamWorkload, SlotPool,
                         stack_carries, unstack_carry)
 
 __all__ = [
     "Engine", "Request", "make_serve_steps",
-    "AdmissionError", "ServeConfig", "Session", "StreamScheduler",
-    "Workload",
+    "AdmissionError", "Rejected", "ServeConfig", "Session",
+    "StreamScheduler", "Workload",
     "LMDecodeWorkload", "NlinvStreamWorkload", "SlotPool",
     "stack_carries", "unstack_carry",
 ]

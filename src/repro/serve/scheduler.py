@@ -29,6 +29,14 @@ The lifecycle of one client:
 ``report()`` emits per-client latency statistics via the same
 ``latency_stats`` every latency number in the repo uses, plus the
 fraction of frames inside the real-time budget (``budget_ms``).
+
+Fault tolerance (see ``docs/fault_tolerance.md``): a *transient* step
+failure requeues the popped items and retries next tick; a workload may
+refuse individual frames with :class:`Rejected` (client quarantine);
+and ``deadline_ms`` arms a degradation ladder — sustained breaches
+lower the workload operating point, then the batch-width cap, stepping
+back up when headroom returns, every transition logged in
+``report()['aggregate']['ft']``.
 """
 
 from __future__ import annotations
@@ -41,10 +49,27 @@ from typing import Any, Optional
 
 from ..nlinv.stream import latency_stats
 
+# Fault-injection hook on the tick boundary (``repro.ft.inject``
+# installs it; this module never imports ft).  Called as ``batch =
+# STEP_HOOK(workload, batch)`` right before ``Workload.step``: it may
+# corrupt per-client items, sleep, or raise a transient failure (the
+# tick requeues and retries).  ``None`` (default) is one attribute read.
+STEP_HOOK = None
+
 
 class AdmissionError(RuntimeError):
     """open() past ``max_concurrency`` + ``max_queue``: the service is
     full and the client must back off (the hard admission bound)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Client-visible error status standing in for a frame the service
+    refused to deliver (poisoned output, quarantined client).  Appears
+    in ``session.results`` so the stream stays frame-aligned; the
+    per-client ``poisoned`` counter in ``report()`` tallies them."""
+
+    reason: str
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +81,16 @@ class ServeConfig:
     queue_depth: int = 4            # staged work items per session
     budget_ms: Optional[float] = None   # real-time SLO target per item
     buckets: tuple = (1, 2, 4, 8)   # allowed batch widths (sorted)
+    # -- deadline enforcement + graceful degradation ----------------------
+    # per-tick wall-clock budget: ``breach_ticks`` consecutive breaches
+    # step DOWN the degradation ladder (workload operating points first,
+    # then smaller batch-width caps); ``recover_ticks`` consecutive
+    # ticks under ``headroom * deadline_ms`` step back UP.  None (the
+    # default) disables enforcement entirely.
+    deadline_ms: Optional[float] = None
+    breach_ticks: int = 3
+    recover_ticks: int = 6
+    headroom: float = 0.7
 
     def __post_init__(self):
         if self.max_concurrency < 1:
@@ -65,6 +100,12 @@ class ServeConfig:
         if not self.buckets or list(self.buckets) != sorted(self.buckets):
             raise ValueError(f"buckets must be sorted+nonempty: "
                              f"{self.buckets}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive (None = off)")
+        if self.breach_ticks < 1 or self.recover_ticks < 1:
+            raise ValueError("breach_ticks/recover_ticks must be >= 1")
+        if not 0.0 < self.headroom <= 1.0:
+            raise ValueError(f"headroom must be in (0, 1]: {self.headroom}")
 
     def bucket(self, n: int) -> int:
         """Smallest allowed batch width >= n (n capped at the largest)."""
@@ -86,6 +127,7 @@ class Session:
     results: list = dataclasses.field(default_factory=list)
     latency_ms: list = dataclasses.field(default_factory=list)
     rejected: int = 0               # frames shed by backpressure
+    poisoned: int = 0               # frames rejected by health checks
     admitted: bool = False
     done: bool = False
 
@@ -94,10 +136,30 @@ class Workload:
     """What the scheduler schedules.  Implementations own all device
     state; the scheduler never touches arrays."""
 
+    # degraded operating points below nominal (0 = none: the default
+    # workload cannot trade accuracy for latency, so the deadline ladder
+    # falls straight through to smaller batch buckets)
+    levels: int = 0
+
     def open_session(self, session: Session) -> Any:
         """Admission-time setup (carry init / prefill).  The return
         value becomes ``session.state``."""
         raise NotImplementedError
+
+    def set_level(self, level: int) -> None:
+        """Switch to degraded operating point ``level`` (0 = nominal;
+        called by the scheduler's deadline ladder, only with
+        ``level <= self.levels``)."""
+        if level != 0:
+            raise ValueError(
+                f"{type(self).__name__} declares no degraded operating "
+                f"points (levels={self.levels})")
+
+    def counters(self) -> dict:
+        """Workload-side fault counters merged into
+        ``StreamScheduler.report()['aggregate']['ft']`` (retried tasks,
+        quarantined clients, ...)."""
+        return {}
 
     def enqueue(self, session: Session, item):
         """Stage one submitted work item (hook for upload-at-enqueue;
@@ -129,6 +191,13 @@ class StreamScheduler:
         self.ticks = 0
         self.tick_ms: list[float] = []
         self._sids = itertools.count()
+        # -- fault accounting + degradation-ladder state ------------------
+        self.step_faults = 0            # transient tick failures (requeued)
+        # ladder rung 0..levels+len(buckets)-1: workload operating points
+        # shed accuracy first, then the batch-width cap sheds throughput
+        self.rung = 0
+        self.events: list[dict] = []    # every ladder transition
+        self._breach = self._ok = 0     # consecutive-tick counters
 
     # -- admission --------------------------------------------------------
     def open(self, client: str = "client", **meta) -> Session:
@@ -226,7 +295,7 @@ class StreamScheduler:
         ready = [s for _, s in sorted(self.sessions.items()) if s.pending]
         if not ready:
             return 0
-        cap = self.config.buckets[-1]
+        cap = self._bucket_cap()
         if len(ready) > cap:
             # overcommitted: rotate the start so no client is starved
             r = self.ticks % len(ready)
@@ -234,8 +303,22 @@ class StreamScheduler:
         width = self.config.bucket(len(ready))
         batch = [(s, s.pending.popleft()) for s in ready]
         t0 = time.perf_counter()
-        out = self.workload.step([(s, item) for s, (item, _) in batch],
-                                 width)
+        try:
+            items = [(s, item) for s, (item, _) in batch]
+            hook = STEP_HOOK
+            if hook is not None:
+                items = hook(self.workload, items)
+            out = self.workload.step(items, width)
+        except Exception as e:
+            if not getattr(e, "transient", False):
+                raise
+            # transient tick failure: nothing was delivered — return
+            # every popped item to the FRONT of its queue (submit order
+            # and timestamps intact) and let the next tick retry
+            for s, staged in batch:
+                s.pending.appendleft(staged)
+            self.step_faults += 1
+            return 0
         t1 = time.perf_counter()
         self.ticks += 1
         self.tick_ms.append((t1 - t0) * 1e3)
@@ -245,10 +328,62 @@ class StreamScheduler:
                 f"results for a batch of {len(batch)}")
         for (s, (_, t_submit)), (result, done) in zip(batch, out):
             s.results.append(result)
-            s.latency_ms.append((t1 - t_submit) * 1e3)
+            if isinstance(result, Rejected):
+                # a refused frame is an error outcome, not a latency
+                # sample: it must not pollute the SLO percentiles
+                s.poisoned += 1
+            else:
+                s.latency_ms.append((t1 - t_submit) * 1e3)
             if done:
                 self.close(s)
+        if self.config.deadline_ms is not None:
+            self._deadline((t1 - t0) * 1e3)
         return len(batch)
+
+    # -- deadline enforcement / degradation ladder ------------------------
+    def _bucket_cap(self) -> int:
+        """Largest allowed batch width at the current ladder rung."""
+        shed = max(self.rung - self.workload.levels, 0)
+        return self.config.buckets[
+            max(len(self.config.buckets) - 1 - shed, 0)]
+
+    def _max_rung(self) -> int:
+        return self.workload.levels + len(self.config.buckets) - 1
+
+    def _deadline(self, ms: float) -> None:
+        """Track one tick against the budget; shift the ladder on
+        sustained breaches (down) or sustained headroom (up)."""
+        cfg = self.config
+        if ms > cfg.deadline_ms:
+            self._breach += 1
+            self._ok = 0
+            if self._breach >= cfg.breach_ticks \
+                    and self.rung < self._max_rung():
+                self._breach = 0
+                self._shift(+1, ms)
+        else:
+            self._breach = 0
+            if ms <= cfg.headroom * cfg.deadline_ms:
+                self._ok += 1
+                if self._ok >= cfg.recover_ticks and self.rung > 0:
+                    self._ok = 0
+                    self._shift(-1, ms)
+            else:
+                self._ok = 0
+
+    def _shift(self, direction: int, ms: float) -> None:
+        """Move one rung down (+1) or up (-1): workload operating
+        points shed accuracy before the bucket cap sheds throughput, so
+        recovery restores throughput before accuracy."""
+        self.rung += direction
+        level = min(self.rung, self.workload.levels)
+        if self.workload.levels:
+            self.workload.set_level(level)
+        self.events.append({
+            "tick": self.ticks, "dir": "down" if direction > 0 else "up",
+            "rung": self.rung, "op_level": level,
+            "bucket_cap": self._bucket_cap(),
+            "tick_ms": round(ms, 3)})
 
     def close(self, session: Session) -> None:
         """End one stream: workload teardown, then admit from the
@@ -285,7 +420,7 @@ class StreamScheduler:
         for s in itertools.chain(self.closed, self.waiting,
                                  self.sessions.values()):
             row = {"sid": s.sid, "frames": len(s.latency_ms),
-                   "rejected": s.rejected,
+                   "rejected": s.rejected, "poisoned": s.poisoned,
                    **latency_stats(s.latency_ms)}
             if budget is not None:
                 inside = sum(1 for t in s.latency_ms if t <= budget)
@@ -297,6 +432,17 @@ class StreamScheduler:
                      for s in itertools.chain(self.closed, self.waiting,
                                               self.sessions.values()))
         wall = sum(self.tick_ms)
+        # error accounting: "slow" (latency columns) vs "failing" (these)
+        ft = {
+            "step_faults": self.step_faults,
+            "rejected_poisoned": sum(c["poisoned"]
+                                     for c in clients.values()),
+            "degradation_events": len(self.events),
+            "events": list(self.events),
+            "rung": self.rung,
+            "bucket_cap": self._bucket_cap(),
+            **self.workload.counters(),
+        }
         return {
             "clients": clients,
             "aggregate": {
@@ -305,5 +451,6 @@ class StreamScheduler:
                 "tick": latency_stats(self.tick_ms),
                 "fps": round(frames / max(wall, 1e-9) * 1e3, 2),
                 "rejected": sum(c["rejected"] for c in clients.values()),
+                "ft": ft,
             },
         }

@@ -28,11 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..ft.remesh import migrate_carry, pad_rows
 from ..nlinv.operators import sobolev_weight
 from ..nlinv.recon import Reconstructor, pad_channels
 from ..nlinv.stream import upload_frame
 from ..task import Executor, TaskGraph
-from .scheduler import Session, Workload
+from .scheduler import Rejected, Session, Workload
 
 
 def stack_carries(carries: list) -> dict:
@@ -51,15 +52,27 @@ class NlinvStreamWorkload(Workload):
 
     Work item (per ``submit``): a ``(y, mask)`` acquisition with ``y``
     of shape (J, X, Y) (channel-padded here) and ``mask`` (X, Y).
-    Result: the reconstructed (X, Y) image (device array, ready).
+    Result: the reconstructed (X, Y) image (device array, ready) — or a
+    :class:`~repro.serve.Rejected` status when the health check finds a
+    non-finite output (the client is quarantined: its carry row is
+    re-initialized in place, every other row is untouched).
     Geometry (grid, coil count) is fixed per workload — one scanner
     protocol per scheduler; the first session pins it.
+
+    ``retry`` (a ``repro.ft.RestartPolicy``) arms the tick executor's
+    transient-task retry; ``operating_points`` is the degradation
+    ladder — ``((newton, cg_iters), ...)`` below nominal, coarsest
+    last (default: one derived point at roughly half the CG work).
+    Newton/CG depth is part of every batched plan key, so each point
+    compiles its own program and switching is just a cache lookup after
+    the first visit.
     """
 
-    def __init__(self, rec: Reconstructor, *, damping: float = 0.9):
+    def __init__(self, rec: Reconstructor, *, damping: float = 0.9,
+                 retry=None, operating_points=None):
         self.rec = rec
         self.damping = damping
-        self._exec = Executor()
+        self._exec = Executor(retry=retry)
         self._damp = jax.jit(
             lambda u: jax.tree.map(lambda a: damping * a, u))
         self._geom = None            # (J_padded, grid), pinned by 1st open
@@ -68,6 +81,38 @@ class NlinvStreamWorkload(Workload):
         # plus the Session objects whose carries live in that stack
         self._stack = None
         self._by_sid: dict = {}
+        # -- fault tolerance ----------------------------------------------
+        if operating_points is None:
+            n0, c0 = rec.newton, rec.cg_iters
+            pt = (max(n0 - 1, 1), max(c0 // 2, 2))
+            operating_points = () if pt == (n0, c0) else (pt,)
+        self._points = ((rec.newton, rec.cg_iters),) \
+            + tuple(operating_points)
+        self._level = 0
+        self._health_jit = None
+        self.quarantined = 0         # total quarantine events
+        self.remeshes = 0            # survivor-group migrations
+
+    # -- degradation ladder (scheduler deadline enforcement) --------------
+    @property
+    def levels(self) -> int:
+        return len(self._points) - 1
+
+    def set_level(self, level: int) -> None:
+        """Switch the Newton/CG operating point (0 = nominal).  The
+        carry shapes are level-independent, so the persistent stack
+        stays put; only the plan key changes."""
+        if not 0 <= level <= self.levels:
+            raise ValueError(f"level {level} outside 0..{self.levels}")
+        if level == self._level:
+            return
+        self._level = level
+        self.rec.newton, self.rec.cg_iters = self._points[level]
+
+    def counters(self) -> dict:
+        return {"retried_tasks": self._exec.retried,
+                "quarantined": self.quarantined,
+                "remeshes": self.remeshes}
 
     # -- session lifecycle ------------------------------------------------
     def open_session(self, session: Session):
@@ -96,6 +141,11 @@ class NlinvStreamWorkload(Workload):
         analogue of FrameStream's double buffer)."""
         y, mask = item
         y = pad_channels(np.asarray(y), self.rec.comm.size)
+        if self._geom is not None and y.shape[0] < self._geom[0]:
+            # after an elastic remesh the pinned coil dim can exceed the
+            # raw padding (J was padded for the OLD group size); zero
+            # channels are exact NLINV no-ops, so top up
+            y = pad_rows(y, self._geom[0])
         return upload_frame(self.rec, y, mask)
 
     def close_session(self, session: Session) -> None:
@@ -155,12 +205,99 @@ class NlinvStreamWorkload(Workload):
         vals = self._exec.run(
             g, feeds={"fov": self._fov_d, "weight": self._w_d,
                       "u_prev": ub, "xref_prev": xb},
-            outputs=("u", "xref", "img"))
+            outputs=("u", "xref", "img", "yb"))
         ub, xb, imgb = vals["u"], vals["xref"], vals["img"]
+        # fused health check: one jitted all-finite reduction over the
+        # carry + image + acquisition rows, one (width,) bool vector to
+        # the host.  The INPUT rows matter: a NaN acquisition makes the
+        # CG residual norm NaN, its `rs > thresh` guard False — the
+        # solve degenerates to du = 0 and would silently deliver a
+        # stale image; the only honest outcome is a Rejected frame.
+        ok = np.asarray(self._health(ub, imgb, vals["yb"]))
+        out = []
+        for i in range(width):
+            if bool(ok[i]):
+                if i < B:
+                    out.append((imgb[i], False))
+                continue
+            # quarantine row i: re-initialize its carry slice in place
+            # (rows are vmap-independent — every other client's result
+            # is bitwise what it would have been without the poison).
+            # Padded rows (i >= B) replicate the last session and must
+            # be reset too, or the spill would hand it a poisoned carry.
+            ub, xb = self._reset_row(ub, xb, i)
+            if i < B:
+                self.quarantined += 1
+                out.append((Rejected("non-finite frame output; client "
+                                     "quarantined, carry re-initialized"),
+                            False))
         self._stack = (sids + (sids[-1],) * (width - B), ub, xb)
         self._by_sid = {s.sid: s for s in sessions}
         # NLINV streams are long-lived: never done from inside a tick
-        return [(imgb[i], False) for i in range(B)]
+        return out
+
+    def _health(self, ub, imgb, yb):
+        """All-finite per batch row (carry, image, acquisition), fused
+        into one jitted program."""
+        if self._health_jit is None:
+            def fn(u, img, y):
+                ok = None
+                for a in jax.tree.leaves(u) + [img, y]:
+                    r = jnp.isfinite(a).all(
+                        axis=tuple(range(1, a.ndim)))
+                    ok = r if ok is None else ok & r
+                return ok
+            self._health_jit = jax.jit(fn)
+        return self._health_jit(ub, imgb, yb)
+
+    def _reset_row(self, ub, xb, i: int):
+        """Fresh carry into batch row ``i`` of the stacked pytrees."""
+        J, g = self._geom
+        fresh = self.rec.init_carry(J, g)
+        ub = jax.tree.map(lambda st, fr: st.at[i].set(fr), ub, fresh)
+        xb = jax.tree.map(lambda st, fr: st.at[i].set(fr), xb, fresh)
+        return ub, xb
+
+    # -- elastic remesh ---------------------------------------------------
+    def remesh(self, comm, sessions=()) -> None:
+        """Continue every live stream on a survivor communicator (after
+        ``Environment.survivor`` minted one for a device loss).
+
+        The persistent stack is spilled, a new :class:`Reconstructor`
+        is built on ``comm`` (plan keys carry the group token, so the
+        survivor programs compile fresh), the pinned constants and every
+        session carry in ``sessions`` migrate via
+        ``repro.ft.migrate_carry`` — coil rows zero-padded to the new
+        group size, which is exact for all NLINV sums — and subsequent
+        ticks run at the survivor width.
+        """
+        self._spill()
+        old = self.rec
+        self.rec = Reconstructor(comm, newton=old.newton,
+                                 cg_iters=old.cg_iters,
+                                 channel_sum=old.channel_sum,
+                                 hierarchical=old.hierarchical,
+                                 fused=old.fused, overlap=old.overlap)
+        self.remeshes += 1
+        self._health_jit = None
+        if self._geom is None:
+            return
+        J, g = self._geom
+        size = self.rec.comm.size
+        Jp = -(-J // size) * size
+        self._geom = (Jp, g)
+        self._fov_d = self.rec.put_const(np.asarray(self._fov_d))
+        self._w_d = self.rec.put_const(np.asarray(self._w_d))
+        for s in sessions:
+            if s.done or not isinstance(s.state, dict):
+                continue
+            s.state["u"] = migrate_carry(self.rec, s.state["u"],
+                                         pad_to=Jp)
+            s.state["x_ref"] = migrate_carry(self.rec, s.state["x_ref"],
+                                             pad_to=Jp)
+            # staged uploads live on the LOST group: drop them (the
+            # client resubmits; a dropped frame beats a dead stream)
+            s.pending.clear()
 
 
 class SlotPool:

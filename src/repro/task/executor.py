@@ -38,6 +38,12 @@ import jax
 
 from .graph import TaskGraph
 
+# Fault-injection hook on task dispatch (``repro.ft.inject`` installs
+# it; this module never imports ft).  Called as ``args = TASK_HOOK(task,
+# args)`` immediately before ``task.fn(*args)``: it may corrupt the
+# args, sleep, or raise.  ``None`` (default) costs one attribute read.
+TASK_HOOK = None
+
 
 @dataclasses.dataclass(frozen=True)
 class TaskRun:
@@ -47,6 +53,7 @@ class TaskRun:
     name: str
     kind: str
     host_ms: float
+    retries: int = 0    # re-dispatches this run needed (retry policy)
 
 
 class Executor:
@@ -57,6 +64,15 @@ class Executor:
     ``fence=False`` leaves them in flight — the :class:`Pipeline` uses
     that to keep several frames on the device queue at once.
 
+    ``retry`` takes a ``repro.ft.RestartPolicy``: a task raising a
+    *transient* failure (``exc.transient`` truthy — e.g.
+    ``ft.TransientFault`` — or an instance of ``retryable``) is
+    re-dispatched up to ``max_restarts`` times with exponential backoff.
+    Dispatch is topo-ordered and host-side, so retrying the failed task
+    before anything downstream has been issued re-dispatches its whole
+    downstream subgraph against the retried value; non-transient errors
+    (including ``ft.DeviceLossFault``) propagate to the caller.
+
     >>> g = TaskGraph()
     >>> _ = g.add("one", lambda: 1, outputs=("a",))
     >>> ex = Executor()
@@ -66,8 +82,32 @@ class Executor:
     ['one']
     """
 
-    def __init__(self):
+    def __init__(self, *, retry=None, retryable=()):
         self.trace: list[TaskRun] = []
+        self.retry = retry
+        self.retryable = tuple(retryable)
+        self.retried = 0    # successful re-dispatches, lifetime
+
+    def _dispatch(self, t, args):
+        """One task through the injection hook + retry envelope."""
+        tries = 0
+        backoff = getattr(self.retry, "backoff_s", 0.0)
+        while True:
+            try:
+                hook = TASK_HOOK
+                a = args if hook is None else hook(t, args)
+                return t.fn(*a), tries
+            except Exception as e:  # noqa: BLE001 — policy decides
+                transient = getattr(e, "transient", False) \
+                    or isinstance(e, self.retryable)
+                if self.retry is None or not transient \
+                        or tries >= self.retry.max_restarts:
+                    raise
+                tries += 1
+                self.retried += 1
+                if backoff > 0:
+                    time.sleep(backoff)
+                    backoff *= getattr(self.retry, "backoff_mult", 1.0)
 
     def run(self, graph: TaskGraph, feeds: Mapping[str, Any] | None = None,
             *, outputs: Sequence[str] | None = None,
@@ -83,9 +123,10 @@ class Executor:
         for t in order:
             args = [values[v] for v in t.inputs]
             t0 = time.perf_counter()
-            res = t.fn(*args)
+            res, tries = self._dispatch(t, args)
             self.trace.append(TaskRun(
-                t.name, t.kind, (time.perf_counter() - t0) * 1e3))
+                t.name, t.kind, (time.perf_counter() - t0) * 1e3,
+                retries=tries))
             if len(t.outputs) == 1:
                 values[t.outputs[0]] = res
             elif t.outputs:
@@ -126,14 +167,21 @@ class Pipeline:
     [('f0', {'y': 1})]
     >>> [tag for tag, _ in pipe.flush()]
     ['f1', 'f2']
+
+    With ``drop_failed=True`` a step whose dispatch raises is DROPPED —
+    recorded in ``dropped`` and ``push`` returns ``(None, [])`` — so a
+    stream keeps draining past a poisoned frame instead of deadlocking
+    the window; the caller decides what stands in for the lost step.
     """
 
     def __init__(self, executor: Executor | None = None, *,
-                 inflight: int = 2):
+                 inflight: int = 2, drop_failed: bool = False):
         if inflight < 1:
             raise ValueError("Pipeline needs inflight >= 1")
         self.executor = executor or Executor()
         self.inflight = inflight
+        self.drop_failed = drop_failed
+        self.dropped: list[tuple] = []    # (tag, exception) per drop
         self._window: deque = deque()
 
     def __len__(self) -> int:
@@ -143,8 +191,14 @@ class Pipeline:
              feeds: Mapping[str, Any] | None = None, *,
              tag: Any = None,
              outputs: Sequence[str] | None = None) -> tuple[dict, list]:
-        vals = self.executor.run(graph, feeds, outputs=outputs,
-                                 fence=False)
+        try:
+            vals = self.executor.run(graph, feeds, outputs=outputs,
+                                     fence=False)
+        except Exception as e:  # noqa: BLE001 — opted in via drop_failed
+            if not self.drop_failed:
+                raise
+            self.dropped.append((tag, e))
+            return None, []
         self._window.append((tag, vals))
         retired = []
         while len(self._window) > self.inflight:

@@ -59,6 +59,7 @@ EXPECTED_ENVIRONMENT = {
     "group": ("self", "shape", "axes"),
     "subgroup": ("self", "n", "axes"),
     "from_mesh": ("self", "mesh"),
+    "survivor": ("self", "comm", "lost"),
 }
 
 # Old free function -> its replacement (the deprecation/migration table).
@@ -225,8 +226,8 @@ def test_bench_timing_fields():
 
 EXPECTED_SERVE_ALL = [
     "Engine", "Request", "make_serve_steps",
-    "AdmissionError", "ServeConfig", "Session", "StreamScheduler",
-    "Workload",
+    "AdmissionError", "Rejected", "ServeConfig", "Session",
+    "StreamScheduler", "Workload",
     "LMDecodeWorkload", "NlinvStreamWorkload", "SlotPool",
     "stack_carries", "unstack_carry",
 ]
@@ -246,6 +247,8 @@ EXPECTED_WORKLOAD_HOOKS = {
     "enqueue": ("self", "session", "item"),
     "step": ("self", "batch", "width"),
     "close_session": ("self", "session"),
+    "set_level": ("self", "level"),
+    "counters": ("self",),
 }
 
 

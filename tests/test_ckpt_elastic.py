@@ -38,3 +38,65 @@ check("downshard", np.allclose(np.asarray(got2["w"]), tree["w"]))
 
 def test_elastic_reshard_8dev():
     run_with_devices(ELASTIC, ndev=8)
+
+
+LIVE_CARRY = """
+import tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.ckpt import save, restore_sharded
+from repro.core import compat
+from repro.core.env import Environment
+from repro.ft import migrate_carry
+from repro.nlinv.recon import Reconstructor
+from repro.nlinv.stream import FramePipeline
+
+env = Environment()
+comm4 = env.group()
+check("starts on 4 devices", comm4.size == 4)
+rng = np.random.default_rng(0)
+F, J, g = 4, 4, 16
+y = (rng.normal(size=(F, J, g, g)) +
+     1j * rng.normal(size=(F, J, g, g))).astype(np.complex64)
+masks = (rng.random(size=(F, g, g)) < 0.4).astype(np.float32)
+fov = np.ones((g, g), np.float32)
+
+# uninterrupted 4-device reference movie
+rec4 = Reconstructor(comm4, newton=2, cg_iters=6)
+ref, _ = FramePipeline(rec4, inflight=2).run(y, masks, fov)
+ref = np.asarray(ref)
+
+# first half on 4 devices, then checkpoint the LIVE pipeline carry
+rec4b = Reconstructor(comm4, newton=2, cg_iters=6)
+pipe4 = FramePipeline(rec4b, inflight=2)
+first, _ = pipe4.run(y[:2], masks[:2], fov)
+tmp = tempfile.mkdtemp()
+save(tmp, 2, pipe4.last_carry)
+
+# "restart" on HALF the machine: restore the carry replicated on a
+# 2-device mesh, migrate it onto a survivor Reconstructor, resume
+comm2 = env.subgroup(2)
+mesh2 = compat.make_mesh((2,), ("data",))
+like = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype),
+                    pipe4.last_carry)
+sh = jax.tree.map(lambda _: NamedSharding(mesh2, P()), like)
+carry_host, step = restore_sharded(tmp, like, sh)
+check("checkpoint step", step == 2)
+rec2 = Reconstructor(comm2, newton=2, cg_iters=6)
+carry2 = {"u": migrate_carry(rec2, carry_host["u"]),
+          "x_ref": migrate_carry(rec2, carry_host["x_ref"])}
+second, _ = FramePipeline(rec2, inflight=2).run(
+    y[2:], masks[2:], fov, carry=carry2)
+
+movie = np.concatenate([np.asarray(first), np.asarray(second)])
+check("frame count", movie.shape[0] == F)
+for f in range(F):
+    rel = np.abs(movie[f] - ref[f]).max() / max(np.abs(ref[f]).max(), 1e-30)
+    check(f"4dev->ckpt->2dev parity f{f} (rel={rel:.2e})", rel <= 1e-5)
+"""
+
+
+def test_live_pipeline_carry_roundtrip_4_to_2():
+    """A FramePipeline carry checkpointed mid-stream on 4 devices
+    restores onto 2 and resumes with parity vs the uninterrupted run
+    (the serving-grade elastic path: device loss between frames)."""
+    run_with_devices(LIVE_CARRY, ndev=4)
